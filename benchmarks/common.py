@@ -1,0 +1,29 @@
+"""Shared benchmark plumbing: CSV emission + cached offline fits."""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+@functools.lru_cache(maxsize=None)
+def fitted(workload_name: str, n_cores: int, n_categories: int = 4,
+           days: float = 6.0, seed: int = 0):
+    from repro.configs.workloads import WORKLOADS
+    from repro.core.offline import fit
+    return fit(WORKLOADS[workload_name], n_cores=n_cores,
+               days_unlabeled=days, n_categories=n_categories, seed=seed)
+
+
+@functools.lru_cache(maxsize=None)
+def stream(workload_name: str, days: float = 2.0, seed: int = 99):
+    from repro.configs.workloads import WORKLOADS
+    from repro.data.stream import generate
+    return generate(WORKLOADS[workload_name], days=days, seed=seed)

@@ -1,0 +1,37 @@
+"""Run every paper-table/figure benchmark. Prints ``name,us_per_call,
+derived`` CSV rows (one module per paper artifact — see DESIGN.md §6)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation, cost_quality, design_alternatives,
+                            forecaster_bench, kernels_bench, offline_phase,
+                            overheads, roofline, switcher_accuracy)
+    print("name,us_per_call,derived")
+    modules = [
+        ("overheads(Fig13)", overheads),
+        ("offline_phase(Table3)", offline_phase),
+        ("kernels", kernels_bench),
+        ("roofline(g)", roofline),
+        ("switcher_accuracy(Fig15/T4)", switcher_accuracy),
+        ("forecaster(T5/T6/Fig14/18)", forecaster_bench),
+        ("design_alternatives(AppB)", design_alternatives),
+        ("ablation(Figs6-13)", ablation),
+        ("cost_quality(Fig4/T2)", cost_quality),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        try:
+            mod.run(verbose=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{str(e)[:120]}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

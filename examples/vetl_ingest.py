@@ -1,0 +1,65 @@
+"""Figure-3 style end-to-end V-ETL run: 24 h of a synthetic traffic
+stream on constrained hardware with buffering + cloud bursting.
+
+    PYTHONPATH=src python examples/vetl_ingest.py
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.workloads import COVID
+from repro.core import ingest as IG
+from repro.core.offline import fit
+from repro.data.stream import generate
+
+
+def sparkline(xs, width=64):
+    xs = np.asarray(xs, float)
+    xs = xs[:: max(1, len(xs) // width)]
+    lo, hi = xs.min(), xs.max()
+    ticks = " .:-=+*#%@"
+    if hi - lo < 1e-9:
+        return ticks[0] * len(xs)
+    return "".join(ticks[int((x - lo) / (hi - lo) * (len(ticks) - 1))]
+                   for x in xs)
+
+
+def main():
+    print("== offline phase (fit on 6 days of historical stream) ==")
+    fitted = fit(COVID, n_cores=8, days_unlabeled=6.0, n_categories=4)
+    print(f"K={len(fitted.configs)} Pareto configs, costs="
+          f"{np.round(fitted.cost, 2)} core-s/seg")
+    print(f"forecaster val MAE: {fitted.forecast_metrics['val_mae']:.4f}")
+
+    print("\n== online: 24h ingestion, 8 cores + 4GB buffer + cloud ==")
+    stream = generate(COVID, days=1.0, seed=99)
+    res = IG.run_skyscraper(fitted, stream, n_cores=8,
+                            cloud_budget_core_s=15_000.0, buffer_gb=4.0,
+                            plan_days=0.25)
+    k = IG.best_static_config(fitted, 8)
+    static = IG.run_static(fitted, stream, k, n_cores=8)
+    opt = IG.run_optimum(fitted, stream, n_cores=8,
+                         cloud_budget_core_s=15_000.0)
+
+    print(f"skyscraper quality: {res.quality_pct:6.2f}%  "
+          f"(work {res.work_core_s / 1e3:.0f}k core-s, "
+          f"cloud {res.cloud_core_s:.0f} core-s)")
+    print(f"static-best quality: {static.quality_pct:6.2f}%")
+    print(f"optimum (oracle):    {opt.quality_pct:6.2f}%")
+    print(f"knob switches: "
+          f"{int((np.diff(res.k_trace) != 0).sum())} over "
+          f"{len(res.k_trace)} segments")
+    print("\nbuffer fill over the day (paper Fig. 3, third panel):")
+    print("  " + sparkline(res.buffer_trace))
+    print("difficulty (content) over the day:")
+    print("  " + sparkline(stream.difficulty))
+    print("chosen config cost over the day (second panel):")
+    print("  " + sparkline(fitted.cost[res.k_trace]))
+    assert res.quality_pct > static.quality_pct
+    print("\nOK: content-adaptive ingestion beat the static baseline.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, MoECfg, SSMCfg, get, registry
+from repro.configs.shapes import SHAPES, ShapeSpec, all_cells, applicable
+
+__all__ = [
+    "ArchConfig", "MoECfg", "SSMCfg", "get", "registry",
+    "SHAPES", "ShapeSpec", "all_cells", "applicable",
+]

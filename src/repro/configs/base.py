@@ -1,0 +1,167 @@
+"""Architecture config dataclasses.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG`` (the exact published numbers) and relying on ``reduced()`` for
+CPU smoke tests. ``registry()`` maps arch-id -> ArchConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int = 8
+    top_k: int = 2
+    # capacity factor for dropping-style dispatch (dry-run realistic comms)
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    head_dim: int = 64
+    d_inner: int = 0          # 0 -> 2*d_model
+    chunk: int = 256          # SSD chunk length
+    n_groups: int = 1
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp: str = "swiglu"       # swiglu | relu2 | gelu
+    window: Optional[int] = None          # sliding-window attention size
+    global_layers: Tuple[int, ...] = ()   # layers with full attention (hybrid)
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    max_target_len: int = 448
+    # modality frontend stub: none | patch | audio
+    frontend: str = "none"
+    frontend_tokens: int = 0   # prepended stub-embedding positions
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        if self.ssm is None:
+            return 0
+        return self.ssm.d_inner or 2 * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        if self.ssm is None:
+            return 0
+        return self.d_inner // self.ssm.head_dim
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128,
+            vocab=256,
+            head_dim=16,
+            window=min(self.window, 32) if self.window else None,
+            global_layers=(0,) if self.global_layers else (),
+            frontend_tokens=min(self.frontend_tokens, 8) if self.frontend_tokens else 0,
+        )
+        if self.moe is not None:
+            kw["moe"] = MoECfg(n_experts=4, top_k=2)
+        if self.ssm is not None:
+            kw["ssm"] = SSMCfg(d_state=16, head_dim=16, d_inner=128, chunk=16)
+        if self.n_enc_layers:
+            kw["n_enc_layers"] = 2
+            kw["max_target_len"] = 16
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (for MODEL_FLOPS = 6·N·D) -------------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, hd = self.d_model, self.hd
+        n = 0
+        if self.family == "ssm":
+            n += self._ssm_layer_params() * self.n_layers
+        elif self.family == "hybrid":
+            n += (self._attn_params() + self._ssm_layer_params(hybrid=True)
+                  + self._mlp_params()) * self.n_layers
+        else:
+            per_layer = self._attn_params() + self._mlp_params(active_only)
+            n += per_layer * self.n_layers
+        if self.n_enc_layers:
+            # encoder layers: full attention + mlp (dense)
+            enc = (4 * d * d) + self._mlp_params()
+            # decoder adds cross-attention
+            n += (self.n_enc_layers * enc) + (4 * d * d) * self.n_layers
+        n += self.vocab * d * (1 if self.tie_embeddings else 2)
+        return n
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.hd
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        o = self.n_heads * hd * d
+        return q + kv + o
+
+    def _mlp_params(self, active_only: bool = False) -> int:
+        d = self.d_model
+        mult = 3 if self.mlp == "swiglu" else 2
+        dense = mult * d * self.d_ff
+        if self.moe is None:
+            return dense
+        e = self.moe.top_k if active_only else self.moe.n_experts
+        return e * dense + d * self.moe.n_experts  # + router
+
+    def _ssm_layer_params(self, hybrid: bool = False) -> int:
+        d = self.d_model
+        di = self.d_inner if not hybrid else self.n_heads * self.hd
+        s = self.ssm
+        nh = di // s.head_dim
+        in_proj = d * (2 * di + 2 * s.n_groups * s.d_state + nh)
+        out_proj = di * d
+        conv = s.conv_width * (di + 2 * s.n_groups * s.d_state)
+        extra = (0 if hybrid else 2 * d * self.d_ff)  # pure-ssm has no sep. mlp
+        return in_proj + out_proj + conv + nh + extra * 0
+
+
+_REGISTRY = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def registry():
+    # import all arch modules for side effect
+    from repro.configs import (  # noqa: F401
+        internvl2_26b, nemotron_4_15b, qwen1_5_0_5b, llama3_8b, qwen1_5_110b,
+        hymba_1_5b, mamba2_370m, mixtral_8x7b, mixtral_8x22b, whisper_large_v3,
+    )
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> ArchConfig:
+    return registry()[name]

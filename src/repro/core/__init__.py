@@ -1,0 +1,22 @@
+"""Skyscraper — the paper's contribution: content-adaptive knob tuning
+with throughput guarantees for V-ETL (see DESIGN.md §1)."""
+from repro.core.api import Skyscraper
+from repro.core.categories import classify_1d, classify_full, kmeans
+from repro.core.forecaster import forecast, init_forecaster, train_forecaster
+from repro.core.ingest import (RunResult, best_static_config,
+                               run_chameleon_star, run_optimum,
+                               run_skyscraper, run_static,
+                               run_videostorm_like)
+from repro.core.offline import Fitted, fit
+from repro.core.planner import (plan_value, solve_lp_lagrangian,
+                                solve_lp_scipy)
+from repro.core.switcher import SwitchTables, init_state, switch_step
+
+__all__ = [
+    "Skyscraper", "classify_1d", "classify_full", "kmeans", "forecast",
+    "init_forecaster", "train_forecaster", "RunResult", "best_static_config",
+    "run_chameleon_star", "run_optimum", "run_skyscraper", "run_static",
+    "run_videostorm_like", "Fitted", "fit", "plan_value",
+    "solve_lp_lagrangian", "solve_lp_scipy", "SwitchTables", "init_state",
+    "switch_step",
+]

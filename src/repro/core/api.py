@@ -1,0 +1,169 @@
+"""User-facing Skyscraper API (paper App. F).
+
+    sky = Skyscraper(fps=30, segment_seconds=2.0)
+    sky.set_resources(num_cores=8, buffer_gb=4.0, cloud_budget_core_s=0)
+    sky.register_knob("det_interval", [1, 5, 10])
+    sky.fit(unlabeled_segments, proc_fn)
+    status, out = sky.process(segment)        # online, content-adaptive
+
+``proc_fn(segment, knobs) -> (output, quality)`` is the user's transform
+(the V-ETL *T*). fit() profiles every knob configuration's wall-clock
+runtime (the paper's offline profiling), Pareto-filters configurations,
+builds content categories from measured quality vectors, and trains the
+forecaster. process() is the online loop: classify -> look up plan ->
+switch -> execute.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.categories import kmeans
+from repro.core.forecaster import (forecast, init_forecaster, make_dataset,
+                                   train_forecaster)
+from repro.core.planner import solve_lp_lagrangian
+from repro.core.switcher import SwitchTables, init_state, switch_step
+
+
+class Skyscraper:
+    def __init__(self, fps: int = 30, segment_seconds: float = 2.0,
+                 n_categories: int = 4, seed: int = 0):
+        self.fps = fps
+        self.tau = segment_seconds
+        self.n_categories = n_categories
+        self.seed = seed
+        self.knobs: Dict[str, Sequence] = {}
+        self.num_cores = 1
+        self.buffer_gb = 4.0
+        self.cloud_budget = 0.0
+        self._fitted = False
+
+    def set_resources(self, *, num_cores: int, buffer_gb: float = 4.0,
+                      cloud_budget_core_s: float = 0.0):
+        self.num_cores = num_cores
+        self.buffer_gb = buffer_gb
+        self.cloud_budget = cloud_budget_core_s
+        self.budget_override = None
+
+    def set_budget(self, core_s_per_segment: float):
+        """Override the per-segment compute budget used by the planner
+        (defaults to num_cores * segment_seconds)."""
+        self.budget_override = core_s_per_segment
+        if getattr(self, "_fitted", False):
+            self._replan()
+
+    def register_knob(self, name: str, domain: Sequence):
+        self.knobs[name] = tuple(domain)
+
+    # ------------------------------------------------------------------
+    def fit(self, unlabeled: Sequence, proc_fn: Callable, *,
+            profile_repeats: int = 1, plan_segments: int = 512,
+            n_split: int = 4, max_k: int = 10):
+        """unlabeled: list of segments (opaque to Skyscraper)."""
+        configs = [dict(zip(self.knobs, v))
+                   for v in itertools.product(*self.knobs.values())]
+        # --- profile runtimes + quality vectors on the unlabeled data ---
+        sample = unlabeled[:: max(1, len(unlabeled) // 40)]
+        runtimes = np.zeros(len(configs))
+        quals = np.zeros((len(unlabeled), len(configs)), np.float32)
+        for ki, kv in enumerate(configs):
+            t0 = time.perf_counter()
+            for _ in range(profile_repeats):
+                for seg in sample:
+                    proc_fn(seg, kv)
+            runtimes[ki] = ((time.perf_counter() - t0)
+                            / (profile_repeats * len(sample)))
+            for si, seg in enumerate(unlabeled):
+                _, q = proc_fn(seg, kv)
+                quals[si, ki] = q
+        # --- Pareto-filter configurations -------------------------------
+        mq = quals.mean(axis=0)
+        order = np.argsort(runtimes)
+        keep = []
+        best_q = -1.0
+        for i in order:
+            if mq[i] > best_q + 1e-6:
+                keep.append(i)
+                best_q = mq[i]
+        keep = keep[:max_k]
+        self.configs = [configs[i] for i in keep]
+        self.cost = runtimes[keep] * self.num_cores  # core-s per segment
+        quals = quals[:, keep]
+        # --- categories + forecaster ------------------------------------
+        import jax
+        centers, labels = kmeans(quals, min(self.n_categories, len(unlabeled)),
+                                 seed=self.seed)
+        self.centers = np.asarray(centers)
+        C = self.centers.shape[0]
+        interval = max(1, len(labels) // (4 * n_split))
+        horizon = max(1, min(plan_segments, len(labels) // 4))
+        X, Y = make_dataset(np.asarray(labels), C, interval=interval,
+                            n_split=n_split, horizon=horizon)
+        params = init_forecaster(jax.random.PRNGKey(self.seed), n_split, C)
+        self.forecaster, self.forecast_metrics = train_forecaster(params, X, Y)
+        self.n_split, self.interval = n_split, interval
+        # --- switcher tables (single all-on-prem placement per config) --
+        K = len(self.configs)
+        rt = (self.cost / self.num_cores)[:, None]
+        self.tables = SwitchTables(
+            centers=jnp.asarray(self.centers),
+            power=jnp.asarray(mq[keep]),
+            cost=jnp.asarray(self.cost, jnp.float32),
+            place_rt=jnp.asarray(rt, jnp.float32),
+            place_on=jnp.asarray(self.cost[:, None], jnp.float32),
+            place_cl=jnp.zeros((K, 1), jnp.float32),
+            place_valid=jnp.ones((K, 1), bool),
+            rank_pos=jnp.asarray(np.argsort(np.argsort(-mq[keep])), jnp.int32),
+            tau=self.tau,
+            buffer_cap_s=self.buffer_gb * 1e9 / 90e3,
+            cloud_budget=self.cloud_budget,
+        )
+        self.state = init_state(self.tables)
+        self.proc_fn = proc_fn
+        self._labels_hist: List[int] = []
+        self._plan_every = plan_segments
+        self._seen = 0
+        self._replan()
+        self._fitted = True
+        return self
+
+    def _replan(self):
+        C = self.centers.shape[0]
+        if len(self._labels_hist) >= self.n_split * self.interval:
+            lab = np.asarray(self._labels_hist[-self.n_split * self.interval:])
+            oh = np.eye(C, dtype=np.float32)[lab]
+            hist = oh.reshape(self.n_split, self.interval, C).mean(1)
+            r = np.asarray(forecast(self.forecaster, jnp.asarray(hist)))
+        else:
+            r = np.full(C, 1.0 / C)
+        budget = (self.budget_override if getattr(self, "budget_override",
+                                                  None)
+                  else self.num_cores * self.tau)
+        self.alpha = solve_lp_lagrangian(
+            jnp.asarray(self.centers), self.tables.cost,
+            jnp.asarray(r, jnp.float32), jnp.float32(budget))
+
+    # ------------------------------------------------------------------
+    def process(self, segment, arrival_mult: float = 1.0):
+        """Run the V-ETL Transform on one segment with adaptive knobs."""
+        assert self._fitted, "call fit() first"
+        K = len(self.configs)
+        dummy_quals = jnp.zeros((K,), jnp.float32)  # filled post-exec
+        self.state, out = switch_step(self.state, dummy_quals,
+                                      jnp.float32(arrival_mult),
+                                      self.alpha, self.tables)
+        k = int(out["k"])
+        result, q = self.proc_fn(segment, self.configs[k])
+        # report the measured quality back (drives the next classification)
+        self.state["qual_prev"] = jnp.float32(q)
+        self._labels_hist.append(int(out["c"]))
+        self._seen += 1
+        if self._seen % self._plan_every == 0:
+            self._replan()
+        return {"config": self.configs[k], "k": k, "category": int(out["c"]),
+                "quality": float(q),
+                "buffer_s": float(out["buffer_s"])}, result

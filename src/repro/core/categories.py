@@ -1,0 +1,69 @@
+"""Content categories (paper §3.2): KMeans over |K|-dim quality vectors.
+
+Categories are built so every knob configuration achieves similar quality
+on content of the same category; online, the switcher classifies with a
+SINGLE dimension (the running config's reported quality — Eq. 5), which
+works because categories separate along every config's quality axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kmeans_pp_init(Q: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    """KMeans++ seeding (offline, numpy)."""
+    rng = np.random.default_rng(seed)
+    n = Q.shape[0]
+    centers = [Q[rng.integers(n)]]
+    for _ in range(k - 1):
+        d2 = np.min(
+            [np.sum((Q - c) ** 2, axis=1) for c in centers], axis=0)
+        s = d2.sum()
+        if not np.isfinite(s) or s <= 1e-12:
+            centers.append(Q[rng.integers(n)])   # degenerate: uniform pick
+            continue
+        centers.append(Q[rng.choice(n, p=d2 / s)])
+    return np.stack(centers)
+
+
+@jax.jit
+def _lloyd_step(centers, Q):
+    d = jnp.sum((Q[:, None, :] - centers[None]) ** 2, axis=-1)
+    assign = jnp.argmin(d, axis=1)
+    oh = jax.nn.one_hot(assign, centers.shape[0], dtype=Q.dtype)
+    counts = oh.sum(axis=0)
+    sums = oh.T @ Q
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1)[:, None],
+                    centers)
+    return new, assign
+
+
+def kmeans(Q, k: int, iters: int = 50, seed: int = 0):
+    """Q (n, d) -> (centers (k, d), assignment (n,))."""
+    Qn = np.asarray(Q, np.float32)
+    centers = jnp.asarray(kmeans_pp_init(Qn, k, seed))
+    Qj = jnp.asarray(Qn)
+    for _ in range(iters):
+        centers, assign = _lloyd_step(centers, Qj)
+    # order centers by mean quality (ascending difficulty) for determinism
+    order = jnp.argsort(centers.mean(axis=1))
+    centers = centers[order]
+    _, assign = _lloyd_step(centers, Qj)
+    return centers, assign
+
+
+@jax.jit
+def classify_full(vec, centers):
+    """Full-vector nearest center (offline labeling)."""
+    return jnp.argmin(jnp.sum((centers - vec[None]) ** 2, axis=-1))
+
+
+@jax.jit
+def classify_1d(qual, k_idx, centers):
+    """Paper Eq. 5: argmin_c |centers[c, k_cur] - qual|."""
+    col = jnp.take(centers, k_idx, axis=1)
+    return jnp.argmin(jnp.abs(col - qual))

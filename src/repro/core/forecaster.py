@@ -1,0 +1,99 @@
+"""Forecasting model (paper §3.3, App. H/K): a small MLP mapping the
+recent history of per-interval content-category histograms to the
+category histogram of the next planned interval.
+
+Architecture (App. K): input -> 16 (ReLU) -> 8 (ReLU) -> |C| (softmax).
+Trained 40 epochs, 20% validation split, best-val weights kept.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_forecaster(key, n_split: int, n_categories: int) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in = n_split * n_categories
+
+    def lin(k, i, o):
+        return {"w": jax.random.normal(k, (i, o)) / jnp.sqrt(i),
+                "b": jnp.zeros((o,))}
+
+    return {"l1": lin(k1, d_in, 16), "l2": lin(k2, 16, 8),
+            "l3": lin(k3, 8, n_categories)}
+
+
+def forecast(params, hist):
+    """hist (..., n_split, |C|) -> predicted histogram (..., |C|)."""
+    x = hist.reshape(hist.shape[:-2] + (-1,))
+    x = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    x = jax.nn.relu(x @ params["l2"]["w"] + params["l2"]["b"])
+    return jax.nn.softmax(x @ params["l3"]["w"] + params["l3"]["b"], axis=-1)
+
+
+def _loss(params, X, Y):
+    pred = forecast(params, X)
+    return jnp.mean(jnp.sum((pred - Y) ** 2, axis=-1))
+
+
+@jax.jit
+def _adam_step(params, opt, X, Y, lr):
+    g = jax.grad(_loss)(params, X, Y)
+    m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, opt["m"], g)
+    v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, opt["v"], g)
+    t = opt["t"] + 1
+    mhat = jax.tree.map(lambda x: x / (1 - 0.9 ** t), m)
+    vhat = jax.tree.map(lambda x: x / (1 - 0.999 ** t), v)
+    params = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + 1e-8),
+                          params, mhat, vhat)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train_forecaster(params, X, Y, *, epochs: int = 40, lr: float = 3e-3,
+                     val_frac: float = 0.2, batch: int = 64, seed: int = 0):
+    """X (n, n_split, |C|), Y (n, |C|). Returns (best params, metrics)."""
+    n = X.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_val = max(1, int(n * val_frac))
+    vi, ti = perm[:n_val], perm[n_val:]
+    Xt, Yt = jnp.asarray(X[ti]), jnp.asarray(Y[ti])
+    Xv, Yv = jnp.asarray(X[vi]), jnp.asarray(Y[vi])
+    opt = {"m": jax.tree.map(jnp.zeros_like, params),
+           "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+    best, best_val = params, float("inf")
+    nt = Xt.shape[0]
+    for ep in range(epochs):
+        order = rng.permutation(nt)
+        for i in range(0, nt, batch):
+            idx = order[i:i + batch]
+            params, opt = _adam_step(params, opt, Xt[idx], Yt[idx],
+                                     jnp.float32(lr))
+        val = float(_loss(params, Xv, Yv))
+        if val < best_val:
+            best, best_val = params, val
+    mae = float(jnp.mean(jnp.abs(forecast(best, Xv) - Yv)))
+    return best, {"val_mse": best_val, "val_mae": mae}
+
+
+def make_dataset(labels: np.ndarray, n_categories: int, *,
+                 interval: int, n_split: int, horizon: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """labels (T,) per-segment category ids -> (X, Y) histogram pairs.
+
+    interval: segments per input sub-interval; n_split sub-intervals of
+    history predict the histogram of the next ``horizon`` segments.
+    """
+    T = len(labels)
+    oh = np.eye(n_categories, dtype=np.float32)[labels]
+    X, Y = [], []
+    span = interval * n_split
+    step = max(1, interval // 2)
+    for t in range(span, T - horizon, step):
+        hist = oh[t - span:t].reshape(n_split, interval, n_categories).mean(1)
+        X.append(hist)
+        Y.append(oh[t:t + horizon].mean(0))
+    return np.stack(X), np.stack(Y)

@@ -1,0 +1,329 @@
+"""Online video ingestion (paper §4) + the paper's baselines.
+
+``run_skyscraper``: planning windows (forecast -> LP -> α) around a
+jit-scanned switcher loop. Baselines: Static (fixed config),
+Chameleon* (periodic profiling, buffer-agnostic), VideoStorm-like
+(query-load adaptive: always the most qualitative feasible config),
+and Optimum (ground-truth knapsack — solved exactly via the same
+Lagrangian machinery with one "category" per segment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forecaster import forecast
+from repro.core.offline import Fitted
+from repro.core.planner import solve_lp_lagrangian
+from repro.core.switcher import SwitchTables, init_state, run_window
+from repro.data.stream import Stream
+
+CLOUD_PREMIUM = 1.8      # App. L
+
+
+@dataclass
+class RunResult:
+    quality_sum: float
+    quality_max_sum: float
+    onprem_core_s: float
+    cloud_core_s: float
+    buffer_peak_s: float
+    overflow: bool
+    k_hist: np.ndarray
+    c_trace: np.ndarray = None
+    k_trace: np.ndarray = None
+    buffer_trace: np.ndarray = None
+    plans: List = field(default_factory=list)
+
+    @property
+    def quality_pct(self) -> float:
+        return 100.0 * self.quality_sum / max(self.quality_max_sum, 1e-9)
+
+    @property
+    def work_core_s(self) -> float:
+        return self.onprem_core_s + self.cloud_core_s
+
+
+def _max_quality(stream: Stream, power: np.ndarray) -> np.ndarray:
+    from repro.core.knobs import quality as qfn
+    return qfn(power.max(), stream.difficulty)
+
+
+def run_skyscraper(fitted: Fitted, stream: Stream, *, n_cores: int,
+                   cloud_budget_core_s: float = 0.0, buffer_gb: float = 4.0,
+                   plan_days: Optional[float] = None,
+                   forecast_mode: str = "model",   # model | oracle | uniform
+                   online_finetune: bool = False,  # App. E.2
+                   seed: int = 0) -> RunResult:
+    w = fitted.workload
+    tau = w.segment_seconds
+    plan_days = plan_days or fitted.horizon_segments * tau / 86400
+    W = max(1, int(plan_days * 86400 / tau))
+    tables = fitted.tables(buffer_gb=buffer_gb,
+                           cloud_budget=cloud_budget_core_s)
+    quals = jnp.asarray(stream.quality(fitted.power, seed=seed))
+    arrivals = jnp.asarray(stream.arrival, jnp.float32)
+    T = stream.n_segments
+    C, K = fitted.centers.shape
+    centers = jnp.asarray(fitted.centers)
+    cost = jnp.asarray(fitted.cost)
+
+    state = init_state(tables)
+    labels_hist: List[np.ndarray] = []
+    outs_all = {k: [] for k in ("k", "c", "qual", "on_s", "cl_s", "buffer_s")}
+    plans = []
+    t = 0
+    while t < T:
+        W_t = min(W, T - t)
+        # ---- forecast r (category distribution over the window) ---------
+        if forecast_mode == "oracle":
+            q_true = np.asarray(quals[t:t + W_t])
+            d = ((q_true[:, None, :] - fitted.centers[None]) ** 2).sum(-1)
+            lab = d.argmin(1)
+            r = np.bincount(lab, minlength=C) / W_t
+        elif forecast_mode == "model" and labels_hist:
+            lab = np.concatenate(labels_hist)[-fitted.interval_segments
+                                              * fitted.n_split:]
+            need = fitted.interval_segments * fitted.n_split
+            if len(lab) < need:
+                lab = np.concatenate([np.zeros(need - len(lab), np.int64),
+                                      lab])
+            oh = np.eye(C, dtype=np.float32)[lab]
+            hist = oh.reshape(fitted.n_split, fitted.interval_segments,
+                              C).mean(1)
+            r = np.asarray(forecast(fitted.forecaster, jnp.asarray(hist)))
+        else:
+            r = np.full(C, 1.0 / C)
+        # ---- plan (budget = on-prem + rationed cloud, in core-s) --------
+        cloud_left = cloud_budget_core_s - float(state["cloud_spent"])
+        frac = W_t / (T - t)
+        budget = n_cores * tau * W_t + max(cloud_left, 0.0) * frac / CLOUD_PREMIUM
+        # LP cost is per segment; hand the planner the per-segment budget
+        alpha = solve_lp_lagrangian(centers, cost, jnp.asarray(r, jnp.float32),
+                                    jnp.float32(budget / W_t))
+        plans.append((np.asarray(r), np.asarray(alpha)))
+        # ---- reactive switching over the window --------------------------
+        state, outs = run_window(state, quals[t:t + W_t],
+                                 arrivals[t:t + W_t], alpha, tables)
+        for kk in outs_all:
+            outs_all[kk].append(np.asarray(outs[kk]))
+        labels_hist.append(np.asarray(outs["c"]))
+        t += W_t
+        # App. E.2: continuous online fine-tuning of the forecaster on
+        # the categories the switcher itself has been recording
+        if online_finetune and forecast_mode == "model":
+            lab = np.concatenate(labels_hist)
+            need = fitted.interval_segments * (fitted.n_split + 2)
+            if len(lab) >= need:
+                from repro.core.forecaster import (make_dataset,
+                                                   train_forecaster)
+                X, Y = make_dataset(lab, C,
+                                    interval=fitted.interval_segments,
+                                    n_split=fitted.n_split,
+                                    horizon=min(W, len(lab) // 4))
+                if len(X) >= 8:
+                    fitted.forecaster, _ = train_forecaster(
+                        fitted.forecaster, X, Y, epochs=3, seed=seed)
+
+    cat = {k: np.concatenate(v) for k, v in outs_all.items()}
+    qmax = _max_quality(stream, fitted.power)
+    return RunResult(
+        quality_sum=float(cat["qual"].sum()),
+        quality_max_sum=float(qmax.sum()),
+        onprem_core_s=float(cat["on_s"].sum()),
+        cloud_core_s=float(cat["cl_s"].sum()),
+        buffer_peak_s=float(cat["buffer_s"].max()),
+        overflow=False,
+        k_hist=np.bincount(cat["k"], minlength=K),
+        c_trace=cat["c"], k_trace=cat["k"], buffer_trace=cat["buffer_s"],
+        plans=plans)
+
+
+def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
+                         cloud_budget_core_s: float = 0.0,
+                         buffer_gb: float = 4.0,
+                         plan_days: float = 0.25, seed: int = 0):
+    """Multi-stream ingestion (paper App. D, scenario 1): each stream has
+    its own cores + buffer; the cloud budget and the knob PLAN are joint —
+    one LP over all streams' categories so the shared budget flows to the
+    stream where it buys the most quality."""
+    from repro.core.planner import solve_multi_stream
+    V = len(fitteds)
+    tau = fitteds[0].workload.segment_seconds
+    W = max(1, int(plan_days * 86400 / tau))
+    T = min(s.n_segments for s in streams)
+    tables = [f.tables(buffer_gb=buffer_gb,
+                       cloud_budget=cloud_budget_core_s / V)
+              for f in fitteds]
+    quals = [jnp.asarray(s.quality(f.power, seed=seed))
+             for s, f in zip(streams, fitteds)]
+    arrs = [jnp.asarray(s.arrival, jnp.float32) for s in streams]
+    states = [init_state(tb) for tb in tables]
+    sums = np.zeros(V)
+    qmax = np.zeros(V)
+    t = 0
+    while t < T:
+        W_t = min(W, T - t)
+        # joint plan: per-stream oracle r over the window (App. D Eq. 7-9)
+        rs, qs, costs = [], [], None
+        for v in range(V):
+            q_true = np.asarray(quals[v][t:t + W_t])
+            d = ((q_true[:, None, :] - fitteds[v].centers[None]) ** 2).sum(-1)
+            lab = d.argmin(1)
+            rs.append(np.bincount(lab, minlength=fitteds[v].centers.shape[0])
+                      / W_t)
+            qs.append(fitteds[v].centers)
+        budget = V * n_cores_each * tau + (cloud_budget_core_s / CLOUD_PREMIUM
+                                           * W_t / T)
+        alphas = solve_multi_stream(qs, fitteds[0].cost, rs, budget)
+        for v in range(V):
+            states[v], outs = run_window(states[v], quals[v][t:t + W_t],
+                                         arrs[v][t:t + W_t],
+                                         jnp.asarray(alphas[v]), tables[v])
+            sums[v] += float(np.asarray(outs["qual"]).sum())
+            qmax[v] += float(_max_quality(streams[v], fitteds[v].power
+                                          )[t:t + W_t].sum())
+        t += W_t
+    return {"quality_pct": 100.0 * sums.sum() / max(qmax.sum(), 1e-9),
+            "per_stream_pct": (100.0 * sums / np.maximum(qmax, 1e-9)).tolist()}
+
+
+def _run_fixed_policy(fitted: Fitted, stream: Stream, pick_k, *,
+                      n_cores: int, buffer_gb: float = 4.0,
+                      cloud_budget_core_s: float = 0.0,
+                      extra_backlog: Optional[np.ndarray] = None,
+                      seed: int = 0) -> RunResult:
+    """Shared numpy loop for Static / Chameleon* / VideoStorm baselines.
+    pick_k(t, measured_qualities) -> config index. Buffer-agnostic
+    policies may overflow: overflowing segments are dropped (quality 0).
+    """
+    w = fitted.workload
+    tau = w.segment_seconds
+    cap_s = buffer_gb * 1e9 / 90e3
+    quals = stream.quality(fitted.power, seed=seed)
+    K = len(fitted.configs)
+    b = 0.0
+    cloud = 0.0
+    on_sum = cl_sum = q_sum = 0.0
+    peak = 0.0
+    overflow = False
+    k_hist = np.zeros(K, np.int64)
+    T = stream.n_segments
+    for t in range(T):
+        k = pick_k(t, quals[t])
+        m = stream.arrival[t]
+        # cheapest placement that fits buffer + cloud budget
+        rts = fitted.place_rt[k] * m
+        cls_ = fitted.place_cl[k] * m
+        ons = fitted.place_on[k] * m
+        feas = fitted.place_valid[k] & (rts <= tau + (cap_s - b)) \
+            & (cloud + cls_ <= cloud_budget_core_s)
+        if feas.any():
+            p = np.where(feas, cls_, np.inf).argmin()
+            rt, on_s, cl_s = rts[p], ons[p], cls_[p]
+            q = quals[t, k]
+        else:
+            # buffer-agnostic baseline would overflow: drop the segment
+            overflow = True
+            rt, on_s, cl_s, q = 0.0, 0.0, 0.0, 0.0
+        if extra_backlog is not None:
+            b += extra_backlog[t] / n_cores
+        b = max(0.0, b + rt - tau)
+        peak = max(peak, b)
+        cloud += cl_s
+        on_sum += on_s
+        cl_sum += cl_s
+        q_sum += q
+        k_hist[k] += 1
+    qmax = _max_quality(stream, fitted.power)
+    return RunResult(q_sum, float(qmax.sum()), on_sum, cl_sum, peak,
+                     overflow, k_hist)
+
+
+def run_static(fitted: Fitted, stream: Stream, k: int, **kw) -> RunResult:
+    return _run_fixed_policy(fitted, stream, lambda t, q: k, **kw)
+
+
+def best_static_config(fitted: Fitted, n_cores: int) -> int:
+    """Most qualitative config that runs real-time all-on-prem (ablation 1a)."""
+    tau = fitted.workload.segment_seconds
+    ok = (fitted.cost / n_cores) <= tau
+    if not ok.any():
+        return int(np.argmin(fitted.cost))
+    return int(np.argmax(np.where(ok, fitted.power, -1)))
+
+
+def run_videostorm_like(fitted: Fitted, stream: Stream, *, n_cores: int,
+                        **kw) -> RunResult:
+    """Query-load adaptive (VideoStorm): most qualitative config whose
+    cheapest placement currently fits — content-agnostic, greedy buffer."""
+    order = np.argsort(-fitted.power)
+    tau = fitted.workload.segment_seconds
+    cap_s = kw.get("buffer_gb", 4.0) * 1e9 / 90e3
+    state = {"b": 0.0}
+
+    def pick(t, q):
+        m = stream.arrival[t]
+        for k in order:
+            rts = fitted.place_rt[k] * m
+            feas = fitted.place_valid[k] & (rts <= tau + (cap_s - state["b"]))
+            if feas.any():
+                state["b"] = max(0.0, state["b"]
+                                 + rts[np.where(feas, fitted.place_cl[k],
+                                                np.inf).argmin()] - tau)
+                return int(k)
+        return int(np.argmin(fitted.cost))
+
+    return _run_fixed_policy(fitted, stream, pick, n_cores=n_cores, **kw)
+
+
+def run_chameleon_star(fitted: Fitted, stream: Stream, *, n_cores: int,
+                       epoch_segments: int = 50, profile_top: int = 6,
+                       quality_floor: float = 0.9, seed: int = 0,
+                       **kw) -> RunResult:
+    """Chameleon* (§5.3): periodic profiling of the top configs (the
+    profiling work is real and added to the backlog), then the cheapest
+    config within ``quality_floor`` of the best profiled quality. Buffer
+    added (vs. original Chameleon) but unmanaged."""
+    quals = stream.quality(fitted.power, seed=seed)
+    by_pow = np.argsort(-fitted.power)[:profile_top]
+    current = {"k": int(np.argmin(fitted.cost))}
+    extra = np.zeros(stream.n_segments)
+
+    def pick(t, q):
+        if t % epoch_segments == 0:
+            prof = quals[t, by_pow]
+            extra[min(t, len(extra) - 1)] = fitted.cost[by_pow].sum()
+            ok = by_pow[prof >= quality_floor * prof.max()]
+            current["k"] = int(ok[np.argmin(fitted.cost[ok])])
+        return current["k"]
+
+    return _run_fixed_policy(fitted, stream, pick, n_cores=n_cores,
+                             extra_backlog=extra, seed=seed, **kw)
+
+
+def run_optimum(fitted: Fitted, stream: Stream, *, n_cores: int,
+                cloud_budget_core_s: float = 0.0, seed: int = 0,
+                chunk: int = 40_000) -> RunResult:
+    """Ground-truth knapsack (ablation 2c): per-segment config choice
+    maximizing total quality under the total work budget — the LP bound,
+    solved exactly with the Lagrangian planner (one category/segment)."""
+    w = fitted.workload
+    tau = w.segment_seconds
+    T = stream.n_segments
+    quals = stream.quality(fitted.power, seed=seed)      # (T,K)
+    budget = n_cores * tau * T + cloud_budget_core_s / CLOUD_PREMIUM
+    r = jnp.full((T,), 1.0 / T, jnp.float32)
+    alpha = solve_lp_lagrangian(jnp.asarray(quals), jnp.asarray(fitted.cost),
+                                r, jnp.float32(budget / T))
+    a = np.asarray(alpha)
+    k_sel = a.argmax(1)
+    q_sum = float(quals[np.arange(T), k_sel].sum())
+    work = float(fitted.cost[k_sel].sum())
+    qmax = _max_quality(stream, fitted.power)
+    return RunResult(q_sum, float(qmax.sum()), work, 0.0, 0.0, False,
+                     np.bincount(k_sel, minlength=len(fitted.configs)))

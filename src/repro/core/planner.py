@@ -1,0 +1,132 @@
+"""Knob planner (paper §4.1): assign knob-config mixing histograms to
+content categories, maximizing expected quality under a compute budget.
+
+    max   sum_{k,c} a[k,c] r[c] qual[k,c]
+    s.t.  sum_{k,c} a[k,c] r[c] cost[k] <= budget
+          sum_k a[k,c] = 1,  a >= 0                       (per category)
+
+Two solvers:
+- ``solve_lp_scipy``: the paper's approach (off-the-shelf LP, <1 s).
+- ``solve_lp_lagrangian``: beyond-paper. The LP is a product of simplices
+  coupled by ONE budget constraint, so the dual is a 1-D piecewise-linear
+  function of the budget multiplier λ: at a given λ each category simply
+  picks argmax_k (qual - λ·cost). Bisect λ, then blend the prefer-cheap /
+  prefer-expensive tie-breaks to exhaust the budget exactly. Exact (same
+  optimum as the LP), jit-compiled, ~µs instead of ~ms.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def solve_lp_scipy(qual, cost, r, budget):
+    """qual (C,K); cost (K,); r (C,). Returns alpha (C,K)."""
+    from scipy.optimize import linprog
+    C, K = qual.shape
+    qual = np.asarray(qual, np.float64)
+    cost = np.asarray(cost, np.float64)
+    r = np.asarray(r, np.float64)
+    c_obj = -(r[:, None] * qual).reshape(-1)             # maximize
+    A_ub = (r[:, None] * cost[None, :]).reshape(1, -1)
+    A_eq = np.zeros((C, C * K))
+    for ci in range(C):
+        A_eq[ci, ci * K:(ci + 1) * K] = 1.0
+    res = linprog(c_obj, A_ub=A_ub, b_ub=[budget], A_eq=A_eq,
+                  b_eq=np.ones(C), bounds=(0, 1), method="highs")
+    if not res.success:
+        # infeasible budget: everyone gets the cheapest config
+        alpha = np.zeros((C, K))
+        alpha[:, int(np.argmin(cost))] = 1.0
+        return alpha
+    return res.x.reshape(C, K)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def solve_lp_lagrangian(qual, cost, r, budget, iters: int = 64):
+    """Exact jit-able solver. qual (C,K); cost (K,); r (C,).
+
+    The affordable / unaffordable endpoint solutions are CARRIED through
+    the bisection loop (not recomputed afterwards) so the result is
+    robust to XLA fusion-dependent rounding at argmax boundaries.
+    """
+    qual = qual.astype(jnp.float32)
+    cost = cost.astype(jnp.float32)
+    r = r.astype(jnp.float32)
+    C, K = qual.shape
+    if K == 1:                       # single config: nothing to plan
+        return jnp.ones((C, 1), jnp.float32)
+
+    def pick(lam):
+        score = qual - lam * cost[None, :]
+        idx = jnp.argmax(score, axis=1)
+        a = jax.nn.one_hot(idx, K)
+        spend = jnp.sum(r * (a * cost[None, :]).sum(axis=1))
+        return a, spend
+
+    a0, s0 = pick(jnp.float32(0.0))                       # unconstrained opt
+    # λ large enough that argmax is (near-)min-cost: must beat the largest
+    # quality gap across the SMALLEST positive cost gap.
+    cs = jnp.sort(cost)
+    gaps = jnp.diff(cs)
+    gap_min = jnp.min(jnp.where(gaps > 1e-9, gaps, jnp.inf))
+    gap_min = jnp.where(jnp.isfinite(gap_min), gap_min, 1.0)
+    q_range = jnp.max(qual) - jnp.min(qual)
+    lam_hi0 = jnp.minimum((q_range + 1.0) / jnp.maximum(gap_min, 1e-6), 1e7)
+    a_min, s_min = pick(lam_hi0)                          # min-spend plan
+
+    def body(_, carry):
+        lo, hi, a_aff, s_aff, a_un, s_un = carry
+        mid = 0.5 * (lo + hi)
+        a, s = pick(mid)
+        take = s <= budget
+
+        def sel(x, y):
+            return jnp.where(take, x, y)
+        return (sel(lo, mid), sel(mid, hi),
+                sel(a, a_aff), sel(s, s_aff),
+                sel(a_un, a), sel(s_un, s))
+
+    carry = (jnp.float32(0.0), lam_hi0, a_min, s_min, a0, s0)
+    _, _, a_aff, s_aff, a_un, s_un = jax.lax.fori_loop(0, iters, body, carry)
+    # blend to exhaust the budget: θ·s_un + (1-θ)·s_aff = budget
+    theta = jnp.where(s_un > s_aff,
+                      jnp.clip((budget - s_aff)
+                               / jnp.maximum(s_un - s_aff, 1e-9), 0.0, 1.0),
+                      0.0)
+    a_mix = theta * a_un + (1 - theta) * a_aff
+    return jnp.where(s0 <= budget, a0, a_mix)
+
+
+def plan_value(alpha, qual, cost, r):
+    """Returns (expected quality, expected spend) of a plan."""
+    q = float(jnp.sum(r[:, None] * alpha * qual))
+    s = float(jnp.sum(r[:, None] * alpha * cost[None, :]))
+    return q, s
+
+
+def solve_multi_stream(quals, cost, rs, budget):
+    """Joint multi-stream knob plan (paper App. D, Eqs. 7-9).
+
+    quals: list of per-stream (C_v, K) tables; rs: list of per-stream
+    forecasts (each a distribution); cost (K,); budget = total core-s
+    per segment across ALL streams. The joint LP has the same
+    product-of-simplices + single-budget structure, so the Lagrangian
+    solver applies to the stacked system unchanged.
+    Returns list of per-stream alpha (C_v, K)."""
+    import numpy as np
+    sizes = [q.shape[0] for q in quals]
+    qual = jnp.concatenate([jnp.asarray(q, jnp.float32) for q in quals], 0)
+    r = jnp.concatenate([jnp.asarray(x, jnp.float32) for x in rs], 0)
+    alpha = solve_lp_lagrangian(qual, jnp.asarray(cost, jnp.float32), r,
+                                jnp.float32(budget))
+    out = []
+    off = 0
+    for s in sizes:
+        out.append(alpha[off:off + s])
+        off += s
+    return out

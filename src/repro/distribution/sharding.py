@@ -1,0 +1,182 @@
+"""Logical-axis sharding layer.
+
+Models annotate params/activations with *logical* axes ("batch", "fsdp",
+"tensor", "vocab", "expert", ...). This module resolves them to physical
+mesh axes with divisibility-aware fallbacks:
+
+- ``with_sharding_constraint`` tolerates uneven shardings, so activation
+  constraints are applied whenever the mesh has the axis;
+- ``in_shardings`` (param/cache arguments) must divide evenly, so
+  ``spec_for`` drops any axis that does not divide the dimension.
+
+Mesh is ambient (context manager) so model code stays mesh-agnostic and
+runs unsharded on a single CPU device in tests.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred physical axes (in order; tuples mean "use all")
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "fsdp_pod": ("pod", "data"),   # opt-in: fully shard over pods too
+    "tensor": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "cache_seq": ("model",),
+    "seq": (),                     # sequence parallelism off by default
+    None: (),
+}
+
+
+@dataclass
+class ShardingCtx:
+    mesh: Optional[Mesh] = None
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def axis_size(self, names: Tuple[str, ...]) -> int:
+        if self.mesh is None:
+            return 1
+        s = 1
+        for n in names:
+            if n in self.mesh.shape:
+                s *= self.mesh.shape[n]
+        return s
+
+    def physical(self, logical) -> Tuple[str, ...]:
+        names = self.rules.get(logical, ())
+        if self.mesh is None:
+            return ()
+        return tuple(n for n in names if n in self.mesh.shape)
+
+
+_CTX = ShardingCtx()
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    global _CTX
+    prev = _CTX
+    r = dict(DEFAULT_RULES)
+    if rules:
+        r.update(rules)
+    _CTX = ShardingCtx(mesh=mesh, rules=r)
+    try:
+        yield _CTX
+    finally:
+        _CTX = prev
+
+
+def ctx() -> ShardingCtx:
+    return _CTX
+
+
+def _resolve(dim_axes: Sequence, shape=None, strict: bool = False) -> P:
+    """logical per-dim axes -> PartitionSpec. strict=True enforces
+    divisibility (required for in_shardings); non-strict keeps axes
+    (with_sharding_constraint supports uneven)."""
+    c = _CTX
+    out = []
+    for i, ax in enumerate(dim_axes):
+        phys = c.physical(ax)
+        if not phys:
+            out.append(None)
+            continue
+        if strict and shape is not None:
+            size = math.prod(c.mesh.shape[p] for p in phys)
+            if shape[i] % size != 0:
+                out.append(None)
+                continue
+        out.append(phys if len(phys) > 1 else phys[0])
+    return P(*out)
+
+
+def shard(x, *dim_axes):
+    """Apply a logical sharding constraint to an activation (no-op without
+    a mesh)."""
+    c = _CTX
+    if c.mesh is None:
+        return x
+    spec = _resolve(dim_axes, shape=getattr(x, "shape", None), strict=False)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(c.mesh, spec))
+
+
+def spec_for(shape: Tuple[int, ...], dim_axes: Sequence, mesh: Mesh,
+             rules: Optional[dict] = None) -> P:
+    """Strict (divisible) PartitionSpec for a param/cache argument."""
+    with use_mesh(mesh, rules):
+        return _resolve(dim_axes, shape=shape, strict=True)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Param metadata: single source of truth for shape/dtype/init/logical axes.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    axes: Tuple                      # logical axis (or None) per dim
+    init: str = "normal"             # normal | zeros | ones | ssm_a | dt_bias | embed
+    dtype: str = "float32"
+    fan_in_dims: Tuple[int, ...] = (0,)   # dims contracted at use (for scale)
+
+    def sds(self):
+        import jax.numpy as jnp
+        return jax.ShapeDtypeStruct(self.shape, getattr(jnp, self.dtype))
+
+
+def materialize(meta, key):
+    """Initialize one param from its meta."""
+    import jax.numpy as jnp
+    dt = getattr(jnp, meta.dtype)
+    if meta.init == "zeros":
+        return jnp.zeros(meta.shape, dt)
+    if meta.init == "ones":
+        return jnp.ones(meta.shape, dt)
+    if meta.init == "ssm_a":        # A_log: log of uniform [1, 16]
+        u = jax.random.uniform(key, meta.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if meta.init == "dt_bias":      # inverse-softplus of dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, meta.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dt)
+    if meta.init == "embed":
+        return (jax.random.normal(key, meta.shape, jnp.float32) * 0.02).astype(dt)
+    fan_in = math.prod(meta.shape[d] for d in meta.fan_in_dims) or 1
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, meta.shape, jnp.float32) * scale).astype(dt)
+
+
+def init_tree(meta_tree, key):
+    leaves, treedef = jax.tree.flatten(
+        meta_tree, is_leaf=lambda x: isinstance(x, ParamMeta))
+    keys = jax.random.split(key, len(leaves))
+    vals = [materialize(m, k) for m, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(meta_tree):
+    return jax.tree.map(lambda m: m.sds(), meta_tree,
+                        is_leaf=lambda x: isinstance(x, ParamMeta))
+
+
+def spec_tree(meta_tree, mesh, rules=None):
+    return jax.tree.map(
+        lambda m: spec_for(m.shape, m.axes, mesh, rules), meta_tree,
+        is_leaf=lambda x: isinstance(x, ParamMeta))
+
+
+def sharding_tree(meta_tree, mesh, rules=None):
+    return jax.tree.map(
+        lambda m: NamedSharding(mesh, spec_for(m.shape, m.axes, mesh, rules)),
+        meta_tree, is_leaf=lambda x: isinstance(x, ParamMeta))

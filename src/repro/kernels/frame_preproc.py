@@ -1,0 +1,52 @@
+"""Pallas TPU kernel for V-ETL frame preprocessing: box-downsample by an
+integer factor (the paper's *resolution* knob) — the only pixel-touching
+hot loop Skyscraper itself owns (UDF-internal compute belongs to the
+models). Tiling (the paper's 1x1/2x2 *tiling* knob) is a pure reshape in
+``ops.tile_frames``.
+
+Each grid instance reduces a (bh*f, bw*f, C) input tile to a (bh, bw, C)
+output tile in VMEM — one load, one store, arithmetic intensity f^2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, *, factor: int, bh: int, bw: int):
+    x = x_ref[0].astype(jnp.float32)                     # (bh*f, bw*f, C)
+    C = x.shape[-1]
+    x = x.reshape(bh, factor, bw, factor, C)
+    o_ref[0] = x.mean(axis=(1, 3)).astype(o_ref.dtype)
+
+
+def downsample(frame, factor: int, *, block: int = 64,
+               interpret: bool = True):
+    """frame (H,W,C) or (B,H,W,C), H,W divisible by factor."""
+    squeeze = frame.ndim == 3
+    if squeeze:
+        frame = frame[None]
+    B, H, W, C = frame.shape
+    assert H % factor == 0 and W % factor == 0
+    oh, ow = H // factor, W // factor
+    bh = min(block, oh)
+    bw = min(block, ow)
+    # pad output dims to block multiples
+    gh, gw = -(-oh // bh), -(-ow // bw)
+    ph, pw = gh * bh * factor - H, gw * bw * factor - W
+    if ph or pw:
+        frame = jnp.pad(frame, ((0, 0), (0, ph), (0, pw), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, factor=factor, bh=bh, bw=bw),
+        grid=(B, gh, gw),
+        in_specs=[pl.BlockSpec((1, bh * factor, bw * factor, C),
+                               lambda b, i, j: (b, i, j, 0))],
+        out_specs=pl.BlockSpec((1, bh, bw, C), lambda b, i, j: (b, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, gh * bh, gw * bw, C), frame.dtype),
+        interpret=interpret,
+    )(frame)
+    out = out[:, :oh, :ow]
+    return out[0] if squeeze else out

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes with jnp semantics, validating BlockSpec indexing and the
+streaming-softmax/state-carry logic. On TPU set ``interpret=False`` (the
+default flips automatically based on the backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import frame_preproc as _fp
+from repro.kernels import ssd as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
+             interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("factor", "block", "interpret"))
+def downsample(frame, *, factor: int, block: int = 64,
+               interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fp.downsample(frame, factor, block=block, interpret=interpret)
+
+
+def tile_frames(frame, tiles: int):
+    """Paper's tiling knob: split (B,H,W,C) into t x t tiles stacked on
+    batch (t = sqrt(tiles))."""
+    t = int(tiles ** 0.5)
+    if t * t != tiles:
+        raise ValueError("tiles must be a square number")
+    if t == 1:
+        return frame
+    B, H, W, C = frame.shape
+    x = frame.reshape(B, t, H // t, t, W // t, C)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(B * t * t, H // t, W // t, C)

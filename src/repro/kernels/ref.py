@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Naive masked softmax attention. q (B,Sq,H,D); k/v (B,Skv,G,D)."""
+    B, Sq, H, D = q.shape
+    _, Skv, G, _ = k.shape
+    R = H // G
+    qg = q.reshape(B, Sq, G, R, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bqgrd,bsgd->bgrqs", qg, k.astype(jnp.float32))
+    qp, kp = jnp.arange(Sq), jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqs,bsgd->bgrqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (see models.ssd.ssd_ref)."""
+    from repro.models.ssd import ssd_ref as _r
+    y, _ = _r(x, dt, A, Bm, Cm)
+    return y
+
+
+def downsample_ref(frame, factor: int):
+    squeeze = frame.ndim == 3
+    if squeeze:
+        frame = frame[None]
+    B, H, W, C = frame.shape
+    x = frame.astype(jnp.float32).reshape(
+        B, H // factor, factor, W // factor, factor, C)
+    out = x.mean(axis=(2, 4)).astype(frame.dtype)
+    return out[0] if squeeze else out

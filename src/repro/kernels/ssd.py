@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid (B, H, nc) with the chunk dimension innermost (sequential on TPU);
+the (P, N) inter-chunk state lives in VMEM scratch and is carried across
+the chunk dimension — the TPU-native analogue of the CUDA SSD kernel's
+persistent-CTA state. Intra-chunk work is two MXU matmuls:
+(Q,N)x(N,Q) for C.B^T and (Q,Q)x(Q,P) for the masked-decay attention.
+
+Validated in interpret mode against ``repro.models.ssd.ssd_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+            chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)               # (Q,P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # (Q,)
+    A = a_ref[0]                                         # ()
+    Bm = b_ref[0, :, 0].astype(jnp.float32)              # (Q,N)
+    Cm = c_ref[0, :, 0].astype(jnp.float32)              # (Q,N)
+
+    la = dt * A                                          # (Q,) log decay
+    cum = jnp.cumsum(la)                                 # (Q,)
+    total = cum[-1]
+    state = state_scr[...]                               # (P,N)
+
+    # intra-chunk: y[t] = sum_{s<=t} (C_t.B_s) exp(cum_t-cum_s) dt_s x_s
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,Q)
+    seg = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    w = jnp.where(tri, jnp.exp(seg) * dt[None, :], 0.0)
+    y = jax.lax.dot_general(CB * w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q,P)
+    # inter-chunk: y[t] += exp(cum_t) * C_t . state   (state (P,N))
+    cs = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,P)
+    y = y + cs * jnp.exp(cum)[:, None]
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: S' = exp(total) S + sum_s exp(total-cum_s) dt_s x_s (x) B_s
+    decay_out = (jnp.exp(total - cum) * dt)[:, None]     # (Q,1)
+    xs = x * decay_out                                   # (Q,P)
+    upd = jax.lax.dot_general(xs, Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P,N)
+    state_scr[...] = jnp.exp(total) * state + upd
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+    """x (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative;
+    Bm/Cm (B,S,G,N). Returns y (B,S,H,P) (final state not emitted)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    grid = (B, H, nc)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=Q, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, ci: (b, ci, h // rep, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, ci: (b, ci, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    return out[:, :S]

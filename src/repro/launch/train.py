@@ -1,0 +1,106 @@
+"""Fault-tolerant training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --reduced --steps 200 --ckpt-dir /tmp/ckpt
+
+- auto-resumes from the latest checkpoint (restart-after-crash);
+- periodic atomic checkpoints with retention;
+- optional --simulate-failure N kills the process at step N (the
+  restart-loop test uses this);
+- elastic: on restart the state is resharded onto whatever mesh the
+  surviving devices form (see runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as CK
+from repro.configs.base import get
+from repro.data.tokens import make_batch_iter
+from repro.distribution import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.models.options import RunOptions
+from repro.runtime.steps import (init_train_state, make_train_step,
+                                 train_state_shardings)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--simulate-failure", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opts = RunOptions(remat="none", layer_loop="scan",
+                      compute_dtype="float32",
+                      microbatches=args.microbatches,
+                      q_chunk=min(128, args.seq), kv_chunk=min(128, args.seq))
+    model = Model(cfg, opts)
+    mesh = make_host_mesh(args.model_axis)
+    rules = opts.rules()
+
+    with shd.use_mesh(mesh, rules):
+        state_sh = train_state_shardings(model, mesh)
+        start = 0
+        if args.ckpt_dir and (CK.latest_step(args.ckpt_dir) is not None):
+            start = CK.latest_step(args.ckpt_dir)
+            state = CK.restore(args.ckpt_dir, start, mesh=mesh,
+                               shardings=state_sh)
+            print(f"[train] resumed from step {start}")
+        else:
+            state = init_train_state(model, jax.random.PRNGKey(args.seed))
+            state = jax.device_put(state, state_sh)
+            print("[train] fresh init")
+
+        step_fn = jax.jit(
+            make_train_step(model, peak_lr=args.lr, warmup=20,
+                            total_steps=args.steps),
+            in_shardings=(state_sh, None), out_shardings=(state_sh, None),
+            donate_argnums=(0,))
+        it = make_batch_iter(cfg, global_batch=args.batch, seq_len=args.seq,
+                             seed=args.seed)
+        losses = []
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = next(it)
+            if args.simulate_failure and step == args.simulate_failure:
+                print(f"[train] SIMULATED FAILURE at step {step}",
+                      flush=True)
+                os._exit(42)
+            state, metrics = step_fn(state, batch)
+            if (step + 1) % args.log_every == 0 or step == start:
+                l = float(metrics["loss"])
+                losses.append(l)
+                print(f"step {step + 1:5d} loss {l:8.4f} "
+                      f"gnorm {float(metrics['gnorm']):7.3f} "
+                      f"({(time.time() - t0):.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                CK.save(args.ckpt_dir, jax.device_get(state), step=step + 1)
+        if args.ckpt_dir:
+            CK.save(args.ckpt_dir, jax.device_get(state), step=args.steps)
+        print(f"[train] done: final loss {losses[-1] if losses else 'n/a'}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Attention: RoPE + chunked (flash-style) GQA attention in pure jnp.
+
+Three paths, all sharing the same math as ``repro.kernels``:
+
+- ``mha``: training/prefill. Streaming-softmax over KV chunks (memory
+  O(q_chunk x kv_chunk), never materializes S x S), GQA without
+  materializing repeated KV heads.
+- ``banded_mha``: sliding-window prefill. Each query chunk attends to a
+  gathered [qs-window, qs+qc) KV band, so FLOPs are O(S*(W+qc)) instead
+  of O(S^2) — this is the sub-quadratic path used by SWA archs.
+- ``decode_attend``: one query step against a (possibly ring-buffer) KV
+  cache with per-slot absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------- RoPE --------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D); positions broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------- full / causal MHA ------------------------------
+def _gqa_scores(qg, kc):
+    # qg (B,qc,G,R,D) x kc (B,kc,G,D) -> (B,G,R,qc,kc)
+    return jnp.einsum("bqgrd,bsgd->bgrqs", qg, kc,
+                      preferred_element_type=jnp.float32)
+
+
+def mha(q, k, v, *, causal: bool = True, q_offset: int = 0,
+        q_chunk: int = 512, kv_chunk: int = 1024, scale: Optional[float] = None):
+    """q (B,Sq,H,D); k,v (B,Skv,G,D) with H = G*R. Returns (B,Sq,H,D).
+
+    Streaming softmax: outer scan over query chunks, inner scan over KV
+    chunks with running (max, denom, acc) in fp32.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, G, _ = k.shape
+    R = H // G
+    scale = scale or D ** -0.5
+    if k.dtype != q.dtype:        # e.g. fp8 cache: upcast at the matmul
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq, nk = -(-Sq // q_chunk), -(-Skv // kv_chunk)
+    pad_q, pad_k = nq * q_chunk - Sq, nk * kv_chunk - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qr = (q * scale).reshape(B, nq, q_chunk, G, R, D)
+    kr = k.reshape(B, nk, kv_chunk, G, D)
+    vr = v.reshape(B, nk, kv_chunk, G, D)
+
+    kv_pos = jnp.arange(nk * kv_chunk)
+    valid_k = kv_pos < Skv
+
+    def q_block(qi, q_blk):
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inputs
+            s = _gqa_scores(q_blk, k_blk)                 # (B,G,R,qc,kc)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = valid_k[ki * kv_chunk + jnp.arange(kv_chunk)]
+            if causal:
+                mask = mask[None, :] & (q_pos[:, None] >= kpos[None, :])
+            else:
+                mask = jnp.broadcast_to(mask[None, :], (q_chunk, kv_chunk))
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bgrqs,bsgd->bgrqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((B, G, R, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, R, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, G, R, q_chunk, D), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (ks, jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,G,R,qc,D)
+        return jnp.moveaxis(out, 3, 1)                    # (B,qc,G,R,D)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ------------------------- banded (sliding-window) --------------------------
+def banded_mha(q, k, v, *, window: int, q_chunk: int = 512,
+               scale: Optional[float] = None):
+    """Causal sliding-window attention, FLOPs O(Sq * (window + q_chunk)).
+
+    Each query chunk [qs, qs+qc) attends to KV band [qs-window, qs+qc).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, G, _ = k.shape
+    R = H // G
+    scale = scale or D ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    nq = -(-Sq // q_chunk)
+    pad_q = nq * q_chunk - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    band = window + q_chunk
+    # left-pad kv by `window` so slice [qs, qs+band) = original [qs-W, qs+qc);
+    # right-pad by pad_q so the final chunk's dynamic_slice never clamps.
+    kp = jnp.pad(k, ((0, 0), (window, pad_q), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, pad_q), (0, 0), (0, 0)))
+    qr = (q * scale).reshape(B, nq, q_chunk, G, R, D)
+
+    def q_block(args):
+        qi, q_blk = args
+        qs = qi * q_chunk
+        k_blk = jax.lax.dynamic_slice_in_dim(kp, qs, band, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(vp, qs, band, axis=1)
+        s = _gqa_scores(q_blk, k_blk)                     # (B,G,R,qc,band)
+        q_pos = qs + jnp.arange(q_chunk)
+        k_pos = qs - window + jnp.arange(band)            # absolute (may be <0)
+        mask = ((k_pos[None, :] <= q_pos[:, None])
+                & (k_pos[None, :] > q_pos[:, None] - window)
+                & (k_pos[None, :] >= 0) & (k_pos[None, :] < Skv))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqs,bsgd->bgrqd", p.astype(v_blk.dtype), v_blk,
+                       preferred_element_type=jnp.float32)
+        return jnp.moveaxis(o, 3, 1)                      # (B,qc,G,R,D)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ------------------------------- decode ------------------------------------
+def decode_attend(q, k_cache, v_cache, slot_pos, cur_pos, *,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None):
+    """One decode step.
+
+    q: (B,1,H,D); caches (B,Sc,G,D); slot_pos (B,Sc) absolute position per
+    slot (-1 = empty); cur_pos (B,) current absolute position.
+    """
+    B, _, H, D = q.shape
+    _, Sc, G, _ = k_cache.shape
+    R = H // G
+    scale = scale or D ** -0.5
+    # low-precision caches (e.g. fp8) are upcast at the matmul
+    k_cache = k_cache.astype(q.dtype)
+    v_cache = v_cache.astype(q.dtype)
+    qg = (q * scale).reshape(B, 1, G, R, D)
+    s = jnp.einsum("bqgrd,bsgd->bgrqs", qg, k_cache,
+                   preferred_element_type=jnp.float32)    # (B,G,R,1,Sc)
+    ok = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window is not None:
+        ok &= slot_pos > (cur_pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqs,bsgd->bgrqd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attend(q, k, v, *, causal: bool, window: Optional[int], q_offset: int = 0,
+           q_chunk: int = 512, kv_chunk: int = 1024):
+    """Dispatch: banded path when a window makes it cheaper, else chunked."""
+    Sq = q.shape[1]
+    if window is not None and causal and Sq > 2 * window:
+        return banded_mha(q, k, v, window=window, q_chunk=min(q_chunk, window))
+    if window is not None and causal:
+        # short sequence: window degenerates to causal-with-band mask; use
+        # banded only if it saves work, else plain causal with window mask
+        return banded_mha(q, k, v, window=window, q_chunk=min(q_chunk, Sq))
+    return mha(q, k, v, causal=causal, q_offset=q_offset,
+               q_chunk=q_chunk, kv_chunk=kv_chunk)

@@ -1,0 +1,81 @@
+"""Common layers: norms, MLP variants, embeddings, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+def mlp(params, x, kind: str):
+    """kind: swiglu (w_gate,w_up,w_down) | relu2/gelu (w_up,w_down)."""
+    if kind == "swiglu":
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        h = jax.nn.silu(g) * u
+    elif kind == "relu2":
+        h = jax.nn.relu(x @ params["w_up"]) ** 2
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"] + params.get("b_up", 0))
+        h = shard(h, "batch", None, "tensor")
+        return h @ params["w_down"] + params.get("b_down", 0)
+    else:
+        raise ValueError(kind)
+    h = shard(h, "batch", None, "tensor")
+    return h @ params["w_down"]
+
+
+def embed_tokens(table, tokens):
+    """table (Vp, d) vocab-sharded; tokens (B, S) int32."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_logits(x, head, vocab: int):
+    """x (..., d) @ head (d,Vp) -> (..., Vp) with padded columns masked."""
+    logits = x @ head
+    if logits.ndim == 3:
+        logits = shard(logits, "batch", None, "vocab")
+    else:
+        logits = shard(logits, "batch", "vocab")
+    vp = head.shape[-1]
+    if vp != vocab:
+        mask = jnp.arange(vp) < vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def softmax_xent(logits, labels, vocab: int):
+    """Mean next-token cross entropy; logits (B,S,Vp) fp32-safe, labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2).astype(jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

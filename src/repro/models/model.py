@@ -1,0 +1,202 @@
+"""Unified Model facade: init / loss / prefill / decode plus the
+ShapeDtypeStruct ``input_specs`` used by the multi-pod dry-run (no device
+allocation, weak-type-correct, shardable)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.distribution import sharding as shd
+from repro.distribution.sharding import ParamMeta
+from repro.models import transformer as tf
+from repro.models import whisper as wp
+from repro.models.options import RunOptions
+
+PM = ParamMeta
+WHISPER_ENC_FRAMES = 1500   # cross-attention source length for decode cells
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, opts: RunOptions = RunOptions()):
+        self.cfg = cfg
+        self.opts = opts
+
+    # ----------------------------- params --------------------------------
+    def meta(self) -> Dict[str, Any]:
+        m = (wp.model_meta(self.cfg) if self.cfg.family == "encdec"
+             else tf.model_meta(self.cfg))
+        if self.opts.param_dtype != "float32":
+            # serving-mode weights (e.g. bf16): matrices only, norms fp32
+            def cast(pm):
+                if len(pm.shape) >= 2 and pm.dtype == "float32":
+                    return PM(pm.shape, pm.axes, pm.init,
+                              self.opts.param_dtype, pm.fan_in_dims)
+                return pm
+            m = jax.tree.map(cast, m,
+                             is_leaf=lambda x: isinstance(x, PM))
+        return m
+
+    def init(self, key):
+        return shd.init_tree(self.meta(), key)
+
+    def abstract_params(self):
+        return shd.abstract_tree(self.meta())
+
+    def param_specs(self, mesh):
+        return shd.spec_tree(self.meta(), mesh, self.opts.rules())
+
+    def param_shardings(self, mesh):
+        return shd.sharding_tree(self.meta(), mesh, self.opts.rules())
+
+    # ----------------------------- steps ---------------------------------
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return wp.loss_fn(params, self.cfg, self.opts, batch)
+        return tf.lm_loss(params, self.cfg, self.opts, batch)
+
+    def forward_logits(self, params, batch):
+        if self.cfg.family == "encdec":
+            enc = wp.encode(params, self.cfg, self.opts, batch["frames"])
+            return wp.decode_train(params, self.cfg, self.opts,
+                                   batch["tokens"], enc)
+        logits, _, _ = tf.lm_forward(params, self.cfg, self.opts,
+                                     batch["tokens"], batch.get("embeds"))
+        return logits
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        if self.cfg.family == "encdec":
+            return wp.prefill(params, self.cfg, self.opts, batch,
+                              cache_len=cache_len)
+        return tf.lm_prefill(params, self.cfg, self.opts, batch["tokens"],
+                             batch.get("embeds"), cache_len=cache_len)
+
+    def decode_step(self, params, cache, token):
+        if self.cfg.family == "encdec":
+            return wp.decode_step(params, self.cfg, self.opts, cache, token)
+        return tf.lm_decode_step(params, self.cfg, self.opts, cache, token)
+
+    # ------------------------- cache metadata ----------------------------
+    def cache_len(self, seq_len: int) -> int:
+        cfg = self.cfg
+        if cfg.window is not None and not cfg.global_layers:
+            return min(seq_len, cfg.window)  # uniform SWA: ring buffer
+        return seq_len
+
+    def cache_meta(self, batch: int, seq_len: int) -> Dict[str, Any]:
+        cfg, opts = self.cfg, self.opts
+        L, G, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        cdt = opts.compute_dtype
+        kvdt = opts.kv_cache_dtype or cdt
+        Sc = self.cache_len(seq_len)
+
+        def kv(sl):
+            return PM((L, batch, sl, G, hd),
+                      (None, "batch", "cache_seq", None, None), "zeros",
+                      kvdt)
+
+        def ssm_pm(di):
+            s = cfg.ssm
+            H = di // s.head_dim
+            GN = s.n_groups * s.d_state
+            cw = s.conv_width - 1
+            return {
+                "ssm": PM((L, batch, H, s.head_dim, s.d_state),
+                          (None, "batch", "tensor", None, None), "zeros",
+                          "float32"),
+                "conv_x": PM((L, batch, cw, di),
+                             (None, "batch", None, "tensor"), "zeros", cdt),
+                "conv_b": PM((L, batch, cw, GN),
+                             (None, "batch", None, "tensor"), "zeros", cdt),
+                "conv_c": PM((L, batch, cw, GN),
+                             (None, "batch", None, "tensor"), "zeros", cdt),
+            }
+
+        pos = PM((), (), "zeros", "int32")
+        slot = PM((Sc,), (None,), "zeros", "int32")
+        if cfg.family == "ssm":
+            return {"layers": ssm_pm(cfg.d_inner), "pos": pos}
+        if cfg.family == "hybrid":
+            di = cfg.n_heads * cfg.hd
+            return {"layers": {"k": kv(Sc), "v": kv(Sc), **ssm_pm(di)},
+                    "pos": pos, "slot_pos": slot}
+        if cfg.family == "encdec":
+            H = cfg.n_heads
+            xkv = PM((L, batch, WHISPER_ENC_FRAMES, H, hd),
+                     (None, "batch", None, None, None), "zeros", cdt)
+            return {"k": kv(Sc), "v": kv(Sc), "xk": xkv, "xv": xkv,
+                    "pos": pos, "slot_pos": slot}
+        return {"layers": {"k": kv(Sc), "v": kv(Sc)}, "pos": pos,
+                "slot_pos": slot}
+
+    def init_cache(self, batch: int, seq_len: int):
+        return shd.init_tree(self.cache_meta(batch, seq_len),
+                             jax.random.PRNGKey(0))
+
+    # ------------------------- input specs -------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every step input (plus their
+        logical axes) for the given assigned shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        cdt = jnp.dtype(self.opts.compute_dtype)
+
+        def tok(b, s):
+            return jax.ShapeDtypeStruct((b, s), i32)
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "encdec":
+                dec = min(cfg.max_target_len, S)
+                return {
+                    "batch": {
+                        "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cdt),
+                        "tokens": tok(B, dec)},
+                    "axes": {"frames": ("batch", None, None),
+                             "tokens": ("batch", None)},
+                }
+            if cfg.frontend_tokens:
+                F = cfg.frontend_tokens
+                return {
+                    "batch": {
+                        "embeds": jax.ShapeDtypeStruct((B, F, cfg.d_model), cdt),
+                        "tokens": tok(B, S - F)},
+                    "axes": {"embeds": ("batch", None, None),
+                             "tokens": ("batch", None)},
+                }
+            return {"batch": {"tokens": tok(B, S)},
+                    "axes": {"tokens": ("batch", None)}}
+
+        # decode: one new token against a cache of seq_len
+        cm = self.cache_meta(B, S)
+        return {
+            "cache": shd.abstract_tree(cm),
+            "cache_meta": cm,
+            "token": jax.ShapeDtypeStruct((B,), i32),
+            "token_axes": ("batch",),
+        }
+
+    def batch_shardings(self, shape: ShapeSpec, mesh):
+        spec = self.input_specs(shape)
+        rules = self.opts.rules()
+        if shape.kind in ("train", "prefill"):
+            return {
+                k: shd.named(mesh, shd.spec_for(v.shape, spec["axes"][k],
+                                                mesh, rules))
+                for k, v in spec["batch"].items()}
+        cache_sh = shd.sharding_tree(spec["cache_meta"], mesh, rules)
+        tok_sh = shd.named(mesh, shd.spec_for((shape.global_batch,),
+                                              spec["token_axes"], mesh, rules))
+        return {"cache": cache_sh, "token": tok_sh}
+
+
+def build(arch_name: str, opts: RunOptions = RunOptions(),
+          reduced: bool = False) -> Model:
+    from repro.configs.base import get
+    cfg = get(arch_name)
+    if reduced:
+        cfg = cfg.reduced()
+    return Model(cfg, opts)

@@ -1,0 +1,45 @@
+"""Runtime options (orthogonal to ArchConfig): dtypes, remat, layer-loop
+mode, sharding-rule variants. These are the §Perf hillclimbing knobs."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RunOptions:
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    kv_cache_dtype: str = ""       # "" -> compute_dtype; e.g. float8_e4m3fn
+    remat: str = "full"            # none | full | dots
+    layer_loop: str = "scan"       # scan | unroll (unroll => exact cost_analysis)
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    ssd_chunk: int = 256
+    microbatches: int = 1
+    # MoE sharding: 'tp' = expert d_ff over model (baseline);
+    # 'cap' = capacity dim over model (shards the dispatch/combine
+    # einsums too — §Perf); 'ep' = expert dim over model (all-to-all)
+    moe_sharding: str = "tp"
+    moe_group: int = 0             # GShard token-group size (0 = whole seq)
+    fsdp: bool = True              # ZeRO-3 params over 'data' (off: pure TP)
+    fsdp_pods: bool = False        # shard params over ('pod','data')
+    compress_pod_grads: bool = False
+    seq_shard_activations: bool = False   # sequence parallelism on activations
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+    def rules(self) -> dict:
+        r = {"expert": (), "expert_ff": (), "moe_cap": ()}
+        if self.moe_sharding == "ep":
+            r["expert"] = ("model",)
+        elif self.moe_sharding == "cap":
+            r["moe_cap"] = ("model",)
+        else:
+            r["expert_ff"] = ("model",)
+        if not self.fsdp:
+            r["fsdp"] = ()
+        elif self.fsdp_pods:
+            r["fsdp"] = ("pod", "data")
+        if self.seq_shard_activations:
+            r["seq"] = ("model",)
+        return r

@@ -1,0 +1,149 @@
+"""Mamba2 SSD (state-space duality) — chunked scan + single-step decode.
+
+Math (per head h, state S in R^{P x N}):
+    S_t = a_t * S_{t-1} + dt_t * x_t (x) B_t        a_t = exp(dt_t * A_h), A_h < 0
+    y_t = C_t . S_t + D_h * x_t
+
+Chunked form (chunk length Q, scan over chunks carrying S):
+    cum_t   = cumsum(log a) within chunk (inclusive)
+    y_intra = [(C_t . B_s) * exp(cum_t - cum_s) * dt_s]_{s<=t} @ x
+    y_inter = exp(cum_t) * (C_t . S_in)
+    S_out   = exp(cum_Q) * S_in + sum_s exp(cum_Q - cum_s) * dt_s * (x_s (x) B_s)
+
+This module is the pure-jnp oracle shared with ``repro.kernels.ssd``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_body(x_c, dt_c, la_c, B_c, C_c, state):
+    """One chunk. Shapes: x_c (B,Q,G,R,P); dt_c/la_c (B,Q,G,R);
+    B_c/C_c (B,Q,G,N); state (B,G,R,P,N) fp32. Returns (y_c, new_state)."""
+    cum = jnp.cumsum(la_c, axis=1)                       # (B,Q,G,R)
+    total = cum[:, -1]                                   # (B,G,R)
+    Q = x_c.shape[1]
+    # intra-chunk (quadratic in Q)
+    CB = jnp.einsum("bqgn,bsgn->bgqs", C_c, B_c,
+                    preferred_element_type=jnp.float32)  # (B,G,Q,Q)
+    seg = cum[:, :, None] - cum[:, None, :]              # (B,Q,S,G,R) t,s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(tri[None, :, :, None, None], jnp.exp(seg), 0.0)
+    w = w * dt_c[:, None]                                # * dt_s  (B,Q,S,G,R)
+    # scores[t,s] = CB[b,g,t,s] * w[b,t,s,g,r]
+    y_intra = jnp.einsum("bgts,btsgr,bsgrp->btgrp", CB, w,
+                         x_c.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    # inter-chunk
+    y_inter = jnp.einsum("bqgn,bgrpn->bqgrp", C_c, state,
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    # state update
+    decay_out = jnp.exp(total[:, None] - cum) * dt_c     # (B,Q,G,R)
+    new_state = (jnp.exp(total)[..., None, None] * state
+                 + jnp.einsum("bqgrp,bqgn,bqgr->bgrpn",
+                              x_c.astype(jnp.float32), B_c, decay_out,
+                              preferred_element_type=jnp.float32))
+    return (y_intra + y_inter), new_state
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
+             init_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,H,P); dt (B,S,H) [post-softplus]; A (H,) negative;
+    Bm/Cm (B,S,G,N). Returns y (B,S,H,P), final state (B,H,P,N)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    R = H // G
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    la = dt * A[None, None, :]                           # (B,S',H) log decay
+    xr = x.reshape(B, nc, Q, G, R, P)
+    dtr = dt.reshape(B, nc, Q, G, R)
+    lar = la.reshape(B, nc, Q, G, R)
+    Br = Bm.reshape(B, nc, Q, G, N)
+    Cr = Cm.reshape(B, nc, Q, G, N)
+
+    if init_state is None:
+        state0 = jnp.zeros((B, G, R, P, N), jnp.float32)
+    else:
+        state0 = init_state.reshape(B, G, R, P, N).astype(jnp.float32)
+
+    def body(state, inp):
+        xc, dtc, lac, bc, cc = inp
+        y, state = ssd_chunk_body(xc, dtc, lac, bc, cc, state)
+        return state, y
+
+    state, ys = jax.lax.scan(
+        body, state0,
+        (jnp.moveaxis(xr, 1, 0), jnp.moveaxis(dtr, 1, 0),
+         jnp.moveaxis(lar, 1, 0), jnp.moveaxis(Br, 1, 0),
+         jnp.moveaxis(Cr, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), state.reshape(B, H, P, N)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, init_state=None):
+    """O(S) sequential reference (oracle for tests)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    R = H // G
+    state = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp                        # (B,H,P),(B,H),(B,G,N)
+        a = jnp.exp(dt_t * A[None, :])                   # (B,H)
+        Bh = jnp.repeat(B_t, R, axis=1)                  # (B,H,N)
+        Ch = jnp.repeat(C_t, R, axis=1)
+        state = (a[..., None, None] * state
+                 + (dt_t[..., None] * x_t)[..., None] * Bh[:, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+        return state, y
+
+    state, ys = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single decode step. state (B,H,P,N) fp32; x_t (B,H,P); dt_t (B,H);
+    B_t/C_t (B,G,N). Returns (y (B,H,P), new state)."""
+    H = x_t.shape[1]
+    R = H // B_t.shape[1]
+    a = jnp.exp(dt_t * A[None, :])
+    Bh = jnp.repeat(B_t, R, axis=1)
+    Ch = jnp.repeat(C_t, R, axis=1)
+    state = (a[..., None, None] * state
+             + (dt_t[..., None] * x_t.astype(jnp.float32))[..., None]
+             * Bh[:, :, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x_t.dtype), state
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C); w (cw,C); b (C,)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i]
+    return (y + b).astype(x.dtype)
+
+
+def causal_conv_step(conv_state, x_t, w, b):
+    """conv_state (B,cw-1,C); x_t (B,C). Returns (y_t, new_state)."""
+    cw = w.shape[0]
+    hist = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,cw,C)
+    y = jnp.einsum("bic,ic->bc", hist.astype(jnp.float32), w) + b
+    return y.astype(x_t.dtype), hist[:, 1:]

@@ -1,0 +1,608 @@
+"""Unified decoder stack: dense (GQA), MoE, SSM (mamba2), hybrid (hymba),
+VLM (patch-embed frontend stub) — train / prefill / decode paths.
+
+Layer params are stacked on a leading L dim and run through either
+``lax.scan`` (compact HLO, fast compiles) or an unrolled python loop
+(exact ``cost_analysis``; required for per-layer heterogeneity such as
+hymba's 3 global-attention layers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distribution.sharding import ParamMeta, shard, ctx
+from repro.models import ssd
+from repro.models.attention import apply_rope, attend, decode_attend
+from repro.models.layers import (embed_tokens, lm_logits, mlp, padded_vocab,
+                                 rms_norm, softmax_xent)
+from repro.models.moe import moe_ffn
+from repro.models.options import RunOptions
+
+PM = ParamMeta
+
+
+# ===========================================================================
+# Parameter metadata
+# ===========================================================================
+def attn_meta(cfg: ArchConfig) -> Dict[str, PM]:
+    d, H, G, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    m = {
+        "ln1": PM((d,), (None,), "ones"),
+        "wq": PM((d, H * hd), ("fsdp", "tensor")),
+        "wk": PM((d, G * hd), ("fsdp", "tensor")),
+        "wv": PM((d, G * hd), ("fsdp", "tensor")),
+        "wo": PM((H * hd, d), ("tensor", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        m["bq"] = PM((H * hd,), ("tensor",), "zeros")
+        m["bk"] = PM((G * hd,), ("tensor",), "zeros")
+        m["bv"] = PM((G * hd,), ("tensor",), "zeros")
+    return m
+
+
+def mlp_meta(cfg: ArchConfig) -> Dict[str, PM]:
+    d, f = cfg.d_model, cfg.d_ff
+    m = {"ln2": PM((d,), (None,), "ones")}
+    if cfg.mlp == "swiglu":
+        m["w_gate"] = PM((d, f), ("fsdp", "tensor"))
+        m["w_up"] = PM((d, f), ("fsdp", "tensor"))
+    else:
+        m["w_up"] = PM((d, f), ("fsdp", "tensor"))
+        if cfg.mlp == "gelu":
+            m["b_up"] = PM((f,), ("tensor",), "zeros")
+            m["b_down"] = PM((d,), (None,), "zeros")
+    m["w_down"] = PM((f, d), ("tensor", "fsdp"))
+    return m
+
+
+def moe_meta(cfg: ArchConfig) -> Dict[str, PM]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    return {
+        "ln2": PM((d,), (None,), "ones"),
+        "router": PM((d, E), ("fsdp", None)),
+        "w_gate": PM((E, d, f), ("expert", "fsdp", "expert_ff"), fan_in_dims=(1,)),
+        "w_up": PM((E, d, f), ("expert", "fsdp", "expert_ff"), fan_in_dims=(1,)),
+        "w_down": PM((E, f, d), ("expert", "expert_ff", "fsdp"), fan_in_dims=(1,)),
+    }
+
+
+def ssm_meta(cfg: ArchConfig, di: Optional[int] = None,
+             own_norm: bool = True) -> Dict[str, PM]:
+    """Projections kept UNFUSED (wx/wz/wb/wc separate, one causal conv
+    per tensor): fused projections split post-matmul leave each half
+    sharded on half the mesh and force GSPMD resharding permutes — see
+    EXPERIMENTS.md §Perf cell 2."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = di or cfg.d_inner
+    H = di // s.head_dim
+    GN = s.n_groups * s.d_state
+    m = {
+        "wx": PM((d, di), ("fsdp", "tensor")),
+        "wz": PM((d, di), ("fsdp", "tensor")),
+        "wb": PM((d, GN), ("fsdp", "tensor")),
+        "wc": PM((d, GN), ("fsdp", "tensor")),
+        "wdt": PM((d, H), ("fsdp", "tensor")),
+        "dt_bias": PM((H,), (None,), "dt_bias"),
+        "A_log": PM((H,), (None,), "ssm_a"),
+        "Dskip": PM((H,), (None,), "ones"),
+        "conv_wx": PM((s.conv_width, di), (None, "tensor")),
+        "conv_bx": PM((di,), ("tensor",), "zeros"),
+        "conv_wb": PM((s.conv_width, GN), (None, "tensor")),
+        "conv_bb": PM((GN,), ("tensor",), "zeros"),
+        "conv_wc": PM((s.conv_width, GN), (None, "tensor")),
+        "conv_bc": PM((GN,), ("tensor",), "zeros"),
+        "gln": PM((di,), ("tensor",), "ones"),
+    }
+    if own_norm:
+        m["ln1"] = PM((d,), (None,), "ones")
+        m["wout"] = PM((di, d), ("tensor", "fsdp"))
+    return m
+
+
+def layer_meta(cfg: ArchConfig) -> Dict[str, PM]:
+    fam = cfg.family
+    if fam == "ssm":
+        return ssm_meta(cfg)
+    if fam == "moe":
+        return {**attn_meta(cfg), **moe_meta(cfg)}
+    if fam == "hybrid":
+        di = cfg.n_heads * cfg.hd
+        m = {**attn_meta(cfg), **mlp_meta(cfg),
+             **ssm_meta(cfg, di=di, own_norm=False)}
+        m["norm_attn"] = PM((di,), ("tensor",), "ones")
+        m["norm_ssm"] = PM((di,), ("tensor",), "ones")
+        return m
+    return {**attn_meta(cfg), **mlp_meta(cfg)}          # dense / vlm
+
+
+def _stack(meta: Dict[str, PM], L: int) -> Dict[str, PM]:
+    return {k: PM((L,) + m.shape, (None,) + tuple(m.axes), m.init, m.dtype,
+                  tuple(d + 1 for d in m.fan_in_dims))
+            for k, m in meta.items()}
+
+
+def model_meta(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    Vp = padded_vocab(cfg.vocab)
+    meta: Dict[str, Any] = {
+        "embed": PM((Vp, d), ("vocab", "fsdp"), "embed"),
+        "final_ln": PM((d,), (None,), "ones"),
+        "layers": _stack(layer_meta(cfg), cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        meta["head"] = PM((d, Vp), ("fsdp", "vocab"))
+    return meta
+
+
+# ===========================================================================
+# Blocks: forward (train/prefill) and decode
+# ===========================================================================
+def _maybe_head_shard(t, n_heads):
+    if ctx().mesh is not None and n_heads % max(ctx().axis_size(("model",)), 1) == 0:
+        return shard(t, "batch", "seq", "tensor", None)
+    return shard(t, "batch", "seq", None, None)
+
+
+def _qkv(p, xn, cfg: ArchConfig):
+    B, S, _ = xn.shape
+    H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = xn @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)
+    k = xn @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0)
+    v = xn @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0)
+    q = _maybe_head_shard(q.reshape(B, S, H, hd), H)
+    k = _maybe_head_shard(k.reshape(B, S, G, hd), G)
+    v = _maybe_head_shard(v.reshape(B, S, G, hd), G)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ArchConfig, opts: RunOptions, *,
+               window: Optional[int], pos_offset: int = 0,
+               return_kv: bool = False):
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, xn, cfg)
+    B, S = x.shape[:2]
+    positions = pos_offset + jnp.arange(S)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attend(q, k, v, causal=True, window=window,
+               q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk)
+    o = o.reshape(B, S, -1) @ p["wo"]
+    out = x + shard(o, "batch", "seq", None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode(p, x, cfg: ArchConfig, *, window, kc, vc, slot_pos, cur_pos):
+    """x (B,1,d); kc/vc (B,Sc,G,hd); slot_pos (Sc,); cur_pos () int32."""
+    B = x.shape[0]
+    H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    Sc = kc.shape[1]
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, xn, cfg)
+    q = apply_rope(q, jnp.full((1,), 1, jnp.int32) * cur_pos, cfg.rope_theta)
+    k = apply_rope(k, jnp.full((1,), 1, jnp.int32) * cur_pos, cfg.rope_theta)
+    slot = jnp.mod(cur_pos, Sc)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+    kc = shard(kc, "batch", "cache_seq", None, None)
+    vc = shard(vc, "batch", "cache_seq", None, None)
+    o = decode_attend(q, kc, vc, slot_pos[None, :],
+                      jnp.broadcast_to(cur_pos, (B,)), window=window)
+    o = o.reshape(B, 1, -1) @ p["wo"]
+    return x + o, kc, vc
+
+
+def _ssm_pre(p, xn, cfg: ArchConfig, di: int):
+    """Unfused projections (see ssm_meta docstring). Returns x_in, z
+    (…,di), b, c (…,GN), dt_raw (…,H)."""
+    x_in = xn @ p["wx"]
+    z = xn @ p["wz"]
+    b = xn @ p["wb"]
+    c = xn @ p["wc"]
+    dtr = xn @ p["wdt"]
+    return x_in, z, b, c, dtr
+
+
+def ssm_apply(p, x, cfg: ArchConfig, opts: RunOptions, *, di: int,
+              own_norm: bool = True, return_state: bool = False):
+    """Mamba2 block over full sequence. x (B,S,d)."""
+    s = cfg.ssm
+    B, S, _ = x.shape
+    H, P, G, N = di // s.head_dim, s.head_dim, s.n_groups, s.d_state
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps) if own_norm else x
+    x_raw, z, b, c, dtr = _ssm_pre(p, xn, cfg, di)
+    x_in = jax.nn.silu(ssd.causal_conv(x_raw, p["conv_wx"], p["conv_bx"]))
+    b_c = jax.nn.silu(ssd.causal_conv(b, p["conv_wb"], p["conv_bb"]))
+    c_c = jax.nn.silu(ssd.causal_conv(c, p["conv_wc"], p["conv_bc"]))
+    Bm = b_c.reshape(B, S, G, N)
+    Cm = c_c.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dtr + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x_in.reshape(B, S, H, P)
+    y, state = ssd.ssd_scan(xh, dt, A, Bm, Cm, chunk=opts.ssd_chunk)
+    y = y + p["Dskip"][None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gln"], cfg.norm_eps)
+    new_cache = None
+    if return_state:
+        cw = s.conv_width
+        new_cache = {"ssm": state,
+                     "conv_x": x_raw[:, -(cw - 1):],
+                     "conv_b": b[:, -(cw - 1):],
+                     "conv_c": c[:, -(cw - 1):]}
+    if own_norm:
+        y = x + shard(y @ p["wout"], "batch", "seq", None)
+    return (y, new_cache) if return_state else y
+
+
+def ssm_decode(p, x, cfg: ArchConfig, *, di: int, ssm_state, cache_l,
+               own_norm: bool = True):
+    """One step. x (B,1,d); ssm_state (B,H,P,N) fp32; cache_l holds
+    conv_x (B,cw-1,di), conv_b/conv_c (B,cw-1,GN)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    H, P, G, N = di // s.head_dim, s.head_dim, s.n_groups, s.d_state
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps) if own_norm else x
+    x_raw, z, b, c, dtr = _ssm_pre(p, xn[:, 0], cfg, di)
+    xo, conv_x = ssd.causal_conv_step(cache_l["conv_x"], x_raw,
+                                      p["conv_wx"], p["conv_bx"])
+    bo, conv_b = ssd.causal_conv_step(cache_l["conv_b"], b,
+                                      p["conv_wb"], p["conv_bb"])
+    co, conv_c = ssd.causal_conv_step(cache_l["conv_c"], c,
+                                      p["conv_wc"], p["conv_bc"])
+    x_in = jax.nn.silu(xo)
+    Bm = jax.nn.silu(bo).reshape(B, G, N)
+    Cm = jax.nn.silu(co).reshape(B, G, N)
+    dt = jax.nn.softplus(dtr + p["dt_bias"])            # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x_in.reshape(B, H, P)
+    y, ssm_state = ssd.ssd_decode_step(ssm_state, xh, dt, A, Bm, Cm)
+    y = y + p["Dskip"][None, :, None] * xh
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), p["gln"], cfg.norm_eps)
+    if own_norm:
+        y = x + y @ p["wout"]
+    new_conv = {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c}
+    return y, ssm_state, new_conv
+
+
+def _ffn(p, x, cfg: ArchConfig, opts: RunOptions):
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_ffn(p, xn, n_experts=cfg.moe.n_experts,
+                         top_k=cfg.moe.top_k,
+                         capacity_factor=opts.capacity_factor,
+                         group_size=opts.moe_group)
+    else:
+        y, aux = mlp(p, xn, cfg.mlp), jnp.float32(0)
+    return x + shard(y, "batch", "seq", None), aux
+
+
+def hybrid_parallel(p, x, cfg: ArchConfig, opts: RunOptions, *,
+                    window: Optional[int], pos_offset: int = 0,
+                    return_cache: bool = False):
+    """Hymba: parallel attention + mamba heads sharing the residual input."""
+    di = cfg.n_heads * cfg.hd
+    B, S, _ = x.shape
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    # attention branch
+    q, k, v = _qkv(p, xn, cfg)
+    positions = pos_offset + jnp.arange(S)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o_attn = attend(q, k, v, causal=True, window=window,
+                    q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk)
+    o_attn = o_attn.reshape(B, S, di)
+    # ssm branch (no own norm / out-proj)
+    y_ssm, ssm_cache = ssm_apply(p, xn, cfg, opts, di=di, own_norm=False,
+                                 return_state=True)
+    comb = 0.5 * (rms_norm(o_attn, p["norm_attn"], cfg.norm_eps)
+                  + rms_norm(y_ssm, p["norm_ssm"], cfg.norm_eps))
+    x = x + shard(comb @ p["wo"], "batch", "seq", None)
+    x, aux = _ffn(p, x, cfg, opts)
+    if return_cache:
+        return x, {"k": k, "v": v, **ssm_cache}, aux
+    return x, aux
+
+
+def hybrid_decode(p, x, cfg: ArchConfig, opts: RunOptions, *, window,
+                  cache_l, slot_pos, cur_pos):
+    di = cfg.n_heads * cfg.hd
+    B = x.shape[0]
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, xn, cfg)
+    q = apply_rope(q, jnp.full((1,), 1, jnp.int32) * cur_pos, cfg.rope_theta)
+    k = apply_rope(k, jnp.full((1,), 1, jnp.int32) * cur_pos, cfg.rope_theta)
+    Sc = cache_l["k"].shape[1]
+    slot = jnp.mod(cur_pos, Sc)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k.astype(cache_l["k"].dtype), slot, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v.astype(cache_l["v"].dtype), slot, 1)
+    o_attn = decode_attend(q, kc, vc, slot_pos[None, :],
+                           jnp.broadcast_to(cur_pos, (B,)), window=window)
+    o_attn = o_attn.reshape(B, 1, di)
+    y_ssm, s_new, conv_new = ssm_decode(p, xn, cfg, di=di, own_norm=False,
+                                        ssm_state=cache_l["ssm"],
+                                        cache_l=cache_l)
+    comb = 0.5 * (rms_norm(o_attn, p["norm_attn"], cfg.norm_eps)
+                  + rms_norm(y_ssm, p["norm_ssm"], cfg.norm_eps))
+    x = x + comb @ p["wo"]
+    x, _ = _ffn(p, x, cfg, opts)
+    return x, {"k": kc, "v": vc, "ssm": s_new, **conv_new}
+
+
+# ===========================================================================
+# Layer-stack runners
+# ===========================================================================
+def _layer_window(cfg: ArchConfig, li: int) -> Optional[int]:
+    if cfg.window is None:
+        return None
+    if cfg.global_layers and li in cfg.global_layers:
+        return None
+    return cfg.window
+
+
+def _block_fwd(lp, x, cfg, opts, *, window, return_cache):
+    fam = cfg.family
+    if fam == "ssm":
+        if return_cache:
+            y, c = ssm_apply(lp, x, cfg, opts, di=cfg.d_inner, return_state=True)
+            return y, c, jnp.float32(0)
+        return ssm_apply(lp, x, cfg, opts, di=cfg.d_inner), None, jnp.float32(0)
+    if fam == "hybrid":
+        if return_cache:
+            return hybrid_parallel(lp, x, cfg, opts, window=window,
+                                   return_cache=True)
+        y, aux = hybrid_parallel(lp, x, cfg, opts, window=window)
+        return y, None, aux
+    # dense / moe / vlm
+    if return_cache:
+        y, (k, v) = attn_apply(lp, x, cfg, opts, window=window, return_kv=True)
+        y, aux = _ffn(lp, y, cfg, opts)
+        return y, {"k": k, "v": v}, aux
+    y = attn_apply(lp, x, cfg, opts, window=window)
+    y, aux = _ffn(lp, y, cfg, opts)
+    return y, None, aux
+
+
+def _wrap_remat(fn, opts: RunOptions):
+    if opts.remat == "none":
+        return fn
+    if opts.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _layer_groups(cfg: ArchConfig):
+    """Contiguous runs of layers sharing the same window (for hymba's
+    interleaved global/SWA layers): [(start, length, window), ...]."""
+    groups = []
+    start = 0
+    cur = _layer_window(cfg, 0)
+    for li in range(1, cfg.n_layers):
+        w = _layer_window(cfg, li)
+        if w != cur:
+            groups.append((start, li - start, cur))
+            start, cur = li, w
+    groups.append((start, cfg.n_layers - start, cur))
+    return groups
+
+
+def run_stack(params, x, cfg: ArchConfig, opts: RunOptions, *,
+              return_cache: bool = False):
+    """Forward through all layers; returns (x, cache|None, aux).
+
+    Heterogeneous stacks (per-layer window differences) run as a GROUPED
+    scan: one lax.scan per contiguous same-window run — O(#groups)
+    compile cost instead of O(L) full unroll."""
+    L = cfg.n_layers
+    heterogeneous = bool(cfg.global_layers) and cfg.window is not None
+    unroll = opts.layer_loop == "unroll"
+
+    if unroll:
+        caches, aux = [], jnp.float32(0)
+        for li in range(L):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            win = _layer_window(cfg, li)
+            fn = _wrap_remat(
+                functools.partial(_block_fwd, cfg=cfg, opts=opts, window=win,
+                                  return_cache=return_cache), opts)
+            x, c, a = fn(lp, x)
+            aux = aux + a
+            caches.append(c)
+        cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+                 if return_cache else None)
+        return x, cache, aux
+
+    groups = (_layer_groups(cfg) if heterogeneous
+              else [(0, L, cfg.window)])
+    aux = jnp.float32(0)
+    cache_parts = []
+    for start, length, win in groups:
+        gp = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0),
+            params["layers"])
+        fn = _wrap_remat(
+            functools.partial(_block_fwd, cfg=cfg, opts=opts, window=win,
+                              return_cache=return_cache), opts)
+
+        def body(carry, lp):
+            x, aux = carry
+            x, c, a = fn(lp, x)
+            return (x, aux + a), c
+
+        (x, aux), cache = jax.lax.scan(body, (x, aux), gp)
+        cache_parts.append(cache)
+    if not return_cache:
+        return x, None, aux
+    cache = (cache_parts[0] if len(cache_parts) == 1 else
+             jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                          *cache_parts))
+    return x, cache, aux
+
+
+def run_stack_decode(params, cache, x, cfg: ArchConfig, opts: RunOptions, *,
+                     slot_pos, cur_pos):
+    """One decode step through all layers. cache['layers'] stacked on L."""
+    L = cfg.n_layers
+    heterogeneous = bool(cfg.global_layers) and cfg.window is not None
+    unroll = opts.layer_loop == "unroll"
+
+    def one(lp, cl, li_window, x):
+        fam = cfg.family
+        if fam == "ssm":
+            y, s_new, conv_new = ssm_decode(lp, x, cfg, di=cfg.d_inner,
+                                            ssm_state=cl["ssm"],
+                                            cache_l=cl)
+            return y, {"ssm": s_new, **conv_new}
+        if fam == "hybrid":
+            return hybrid_decode(lp, x, cfg, opts, window=li_window,
+                                 cache_l=cl, slot_pos=slot_pos,
+                                 cur_pos=cur_pos)
+        y, kc, vc = attn_decode(lp, x, cfg, window=li_window, kc=cl["k"],
+                                vc=cl["v"], slot_pos=slot_pos,
+                                cur_pos=cur_pos)
+        y, _ = _ffn(lp, y, cfg, opts)
+        return y, {"k": kc, "v": vc}
+
+    if unroll:
+        new_layers = []
+        for li in range(L):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            cl = jax.tree.map(lambda a: a[li], cache["layers"])
+            x, cl_new = one(lp, cl, _layer_window(cfg, li), x)
+            new_layers.append(cl_new)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+        return x, new_cache
+
+    groups = (_layer_groups(cfg) if heterogeneous
+              else [(0, L, cfg.window)])
+    cache_parts = []
+    for start, length, win in groups:
+        gp = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0),
+            params["layers"])
+        gc = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0),
+            cache["layers"])
+
+        def body(x, inp):
+            lp, cl = inp
+            x, cl_new = one(lp, cl, win, x)
+            return x, cl_new
+
+        x, new_c = jax.lax.scan(body, x, (gp, gc))
+        cache_parts.append(new_c)
+    new_cache = (cache_parts[0] if len(cache_parts) == 1 else
+                 jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *cache_parts))
+    return x, new_cache
+
+
+# ===========================================================================
+# Top-level LM functions
+# ===========================================================================
+def _head(params, cfg: ArchConfig):
+    return (params["embed"].T if cfg.tie_embeddings else params["head"])
+
+
+def lm_forward(params, cfg: ArchConfig, opts: RunOptions, tokens,
+               embeds=None, *, return_cache: bool = False):
+    """tokens (B,S) int32; embeds (B,F,d) optional frontend stub output."""
+    cdt = jnp.dtype(opts.compute_dtype)
+    params = jax.tree.map(lambda a: a.astype(cdt)
+                          if a.dtype == jnp.float32 and a.ndim > 1 else a,
+                          params)
+    x = embed_tokens(params["embed"], tokens).astype(cdt)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(cdt), x], axis=1)
+    x = shard(x, "batch", "seq", None)
+    x, cache, aux = run_stack(params, x, cfg, opts, return_cache=return_cache)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = lm_logits(x, _head(params, cfg), cfg.vocab)
+    return logits, cache, aux
+
+
+def lm_loss(params, cfg: ArchConfig, opts: RunOptions, batch):
+    tokens = batch["tokens"]
+    embeds = batch.get("embeds")
+    logits, _, aux = lm_forward(params, cfg, opts, tokens, embeds)
+    F = 0 if embeds is None else embeds.shape[1]
+    S = tokens.shape[1]
+    # logits position F+i predicts tokens[:, i+1]
+    lg = logits[:, F:F + S - 1]
+    labels = tokens[:, 1:]
+    loss = softmax_xent(lg, labels, cfg.vocab)
+    return loss + opts.aux_loss_weight * aux
+
+
+def lm_prefill(params, cfg: ArchConfig, opts: RunOptions, tokens,
+               embeds=None, cache_len: Optional[int] = None):
+    """Returns (last-position logits argmax token, cache pytree).
+
+    ``cache_len`` > prompt length reserves decode head-room; unset, the
+    cache is exactly the prompt (ring-buffer eviction on further steps).
+    """
+    logits, layer_cache, _ = lm_forward(params, cfg, opts, tokens, embeds,
+                                        return_cache=True)
+    S_total = logits.shape[1]
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    if opts.kv_cache_dtype:
+        kvdt = jnp.dtype(opts.kv_cache_dtype)
+        layer_cache = {k: (v.astype(kvdt) if k in ("k", "v") else v)
+                       for k, v in layer_cache.items()}
+    cache = {"layers": layer_cache, "pos": jnp.int32(S_total)}
+    if cfg.family != "ssm":
+        Sc = _cache_len_from(layer_cache, cfg)
+        if cache_len is not None and cache_len > Sc:
+            pad = cache_len - Sc
+            def pad_kv(a, name):
+                if name in ("k", "v"):
+                    return jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                return a
+            cache["layers"] = {k: pad_kv(v, k)
+                               for k, v in cache["layers"].items()}
+            slot_pos = jnp.concatenate(
+                [jnp.arange(Sc, dtype=jnp.int32),
+                 jnp.full((pad,), -1, jnp.int32)])
+        else:
+            slot_pos = jnp.arange(Sc, dtype=jnp.int32)
+        cache["slot_pos"] = slot_pos
+    return next_tok, cache
+
+
+def _cache_len_from(layer_cache, cfg):
+    if cfg.family == "ssm":
+        return 1
+    return layer_cache["k"].shape[2]
+
+
+def lm_decode_step(params, cfg: ArchConfig, opts: RunOptions, cache, token):
+    """token (B,) int32 -> (next_token (B,), new cache)."""
+    cdt = jnp.dtype(opts.compute_dtype)
+    params = jax.tree.map(lambda a: a.astype(cdt)
+                          if a.dtype == jnp.float32 and a.ndim > 1 else a,
+                          params)
+    cur = cache["pos"]
+    x = embed_tokens(params["embed"], token[:, None]).astype(cdt)
+    slot_pos = cache.get("slot_pos")
+    if cfg.family != "ssm" and slot_pos is not None:
+        Sc = slot_pos.shape[0]
+        slot = jnp.mod(cur, Sc)
+        slot_pos = jax.lax.dynamic_update_slice(slot_pos, cur[None], (slot,))
+    x, new_layers = run_stack_decode(params, cache, x, cfg, opts,
+                                     slot_pos=slot_pos, cur_pos=cur)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = lm_logits(x[:, 0], _head(params, cfg), cfg.vocab)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_cache = {"layers": new_layers, "pos": cur + 1}
+    if slot_pos is not None:
+        new_cache["slot_pos"] = slot_pos
+    return next_tok, new_cache

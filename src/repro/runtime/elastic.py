@@ -1,0 +1,51 @@
+"""Elastic scaling + failure handling.
+
+Checkpoints are mesh-agnostic (host numpy), so recovery after losing
+devices is: build a new mesh from the surviving devices, derive fresh
+shardings from the SAME logical rules, and restore. ``shrink_mesh``
+picks the largest (data' x model) grid that fits the survivors while
+keeping the model axis intact (TP degree is a property of the lowered
+program; DP/FSDP degree is elastic).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import ckpt as CK
+from repro.runtime.steps import train_state_shardings
+
+
+def make_mesh_from(devices: Sequence, model_axis: int,
+                   pod_axis: int = 1) -> Mesh:
+    n = len(devices)
+    if n % model_axis:
+        raise ValueError(f"{n} devices not divisible by model={model_axis}")
+    data_axis = n // (model_axis * pod_axis)
+    shape = ((pod_axis, data_axis, model_axis) if pod_axis > 1
+             else (data_axis, model_axis))
+    names = (("pod", "data", "model") if pod_axis > 1 else ("data", "model"))
+    devs = np.asarray(devices[:pod_axis * data_axis * model_axis]).reshape(shape)
+    return Mesh(devs, names)
+
+
+def shrink_mesh(old_mesh: Mesh, surviving: Sequence) -> Mesh:
+    """Largest elastic mesh on the survivors with the same model degree."""
+    model_axis = old_mesh.shape.get("model", 1)
+    usable = (len(surviving) // model_axis) * model_axis
+    if usable == 0:
+        raise RuntimeError("not enough devices for one model shard")
+    return make_mesh_from(list(surviving)[:usable], model_axis)
+
+
+def restore_elastic(ckpt_dir: str, model, mesh: Mesh, step=None):
+    """Restore the latest checkpoint resharded onto ``mesh``."""
+    step = CK.latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        return None, None
+    shardings = train_state_shardings(model, mesh)
+    state = CK.restore(ckpt_dir, step, mesh=mesh, shardings=shardings)
+    return state, step

@@ -1,0 +1,88 @@
+"""Step builders: jit-able train / prefill / decode steps with logical
+sharding specs — shared by the launcher, the dry-run, and tests."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution import sharding as shd
+from repro.models.model import Model
+from repro.optim.adamw import (adamw_init, adamw_update, clip_by_global_norm,
+                               warmup_cosine)
+
+
+def init_train_state(model: Model, key):
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model: Model):
+    params = model.abstract_params()
+    zeros = jax.tree.map(lambda s: s, params)
+    return {"params": params,
+            "opt": {"m": zeros, "v": zeros,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_shardings(model: Model, mesh):
+    p = model.param_shardings(mesh)
+    rep = shd.named(mesh, shd.spec_for((), (), mesh))
+    return {"params": p, "opt": {"m": p, "v": p, "count": rep}, "step": rep}
+
+
+def make_train_step(model: Model, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    clip: float = 1.0, weight_decay: float = 0.1):
+    opts = model.opts
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        n_mb = opts.microbatches
+        if n_mb > 1:
+            mb = jax.tree.map(
+                lambda a: a.reshape((n_mb, a.shape[0] // n_mb) + a.shape[1:]),
+                batch)
+
+            def acc(carry, b):
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                return (carry[0] + l,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+
+            zero = (jnp.float32(0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(acc, zero, mb)
+            loss = loss / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr = warmup_cosine(state["opt"]["count"], peak_lr=peak_lr,
+                           warmup=warmup, total=total_steps)
+        new_params, new_opt = adamw_update(grads, state["opt"], params,
+                                           lr=lr, weight_decay=weight_decay)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+    return decode_step

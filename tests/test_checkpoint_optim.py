@@ -1,0 +1,72 @@
+"""Checkpointing (atomic save/restore/retention) + optimizer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as CK
+from repro.optim.adamw import (adamw_init, adamw_update, clip_by_global_norm,
+                               global_norm, warmup_cosine)
+
+
+def tree_eq(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": jnp.int32(7)},
+            "lst": [jnp.zeros(3), jnp.ones(2)]}
+    p = CK.save(str(tmp_path / "x.rsk"), tree)
+    back = CK.restore(p)
+    tree_eq(tree, back)
+    assert back["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_retention_and_latest(tmp_path):
+    d = str(tmp_path / "ckpts")
+    for step in [10, 20, 30, 40]:
+        CK.save(d, {"w": jnp.full((2,), step)}, step=step, keep=2)
+    assert CK.latest_step(d) == 40
+    files = sorted(os.listdir(d))
+    assert files == ["ckpt_00000030.rsk", "ckpt_00000040.rsk"]
+    back = CK.restore(d, 40)
+    assert float(back["w"][0]) == 40
+
+
+def test_no_tmp_left_behind(tmp_path):
+    d = str(tmp_path / "ckpts")
+    CK.save(d, {"w": jnp.ones(3)}, step=1)
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(g, opt, params, lr=0.05, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0],
+                               atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(norm) == pytest.approx(20.0)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.int32(s), peak_lr=1.0, warmup=10,
+                               total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert lrs[99] < lrs[50] < lrs[12]

@@ -1,0 +1,71 @@
+"""Placement simulator (App. M) + Pareto filtering + stream generator."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.workloads import COVID, MOSEI_HIGH, MOSEI_LONG, MOT
+from repro.core.placement import (enumerate_placements, pareto_filter,
+                                  simulate, tasks_from_dag)
+from repro.data.stream import generate
+
+
+def test_all_onprem_vs_cloud_tradeoff():
+    tasks = tasks_from_dag(COVID.dag)
+    rt_on, on_s, cl_on = simulate(tasks, [False] * len(tasks), n_cores=2)
+    rt_cl, _, cl_cl = simulate(tasks, [True] * len(tasks), n_cores=2)
+    assert cl_on == 0.0 and cl_cl > 0.0
+    assert on_s > 0
+
+
+def test_enumerate_placements_pareto_and_endpoints():
+    tasks = tasks_from_dag(MOT.dag)
+    out = enumerate_placements(tasks, n_cores=4)
+    cls = [o[3] for o in out]
+    rts = [o[1] for o in out]
+    # sorted by cloud cost asc; paying more cloud must buy a faster
+    # runtime (strictly decreasing along the frontier)
+    assert cls == sorted(cls)
+    for i in range(1, len(out)):
+        assert rts[i] <= rts[i - 1] + 1e-9
+    assert cls[0] == 0.0      # all-on-prem endpoint present
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                min_size=1, max_size=30))
+def test_pareto_filter_property(pts):
+    points = [(rt, cc, i) for i, (rt, cc) in enumerate(pts)]
+    keep = pareto_filter(points)
+    assert keep
+    for i in keep:
+        # nothing strictly dominates a kept point
+        for j in range(len(pts)):
+            if j == i:
+                continue
+            assert not (pts[j][0] < pts[i][0] - 1e-12
+                        and pts[j][1] < pts[i][1] - 1e-12)
+
+
+def test_stream_statistics_match_paper():
+    for w, dwell in [(COVID, 42.0), (MOT, 43.0)]:
+        s = generate(w, days=2.0, seed=0)
+        # mean dwell time of latent runs ~ paper's reported values
+        changes = np.flatnonzero(np.diff(s.latent) != 0)
+        runs = np.diff(np.concatenate([[0], changes, [s.n_segments]]))
+        mean_dwell_s = runs.mean() * w.segment_seconds
+        assert 0.5 * dwell < mean_dwell_s < 2.5 * dwell
+        assert s.difficulty.min() >= 0 and s.difficulty.max() <= 1
+
+
+def test_mosei_spikes_present():
+    hi = generate(MOSEI_HIGH, days=1.0, seed=0)
+    lo = generate(MOSEI_LONG, days=1.0, seed=0)
+    assert hi.arrival.max() >= 4.0           # short tall spikes
+    assert (lo.arrival > 2.0).mean() > 0.15  # long sustained peak
+    assert hi.arrival.min() >= 1.0
+
+
+def test_quality_monotone_in_power():
+    s = generate(COVID, days=0.2, seed=1)
+    power = np.array([0.1, 0.5, 0.9])
+    q = s.quality(power, noise_sigma=0.0)
+    assert (np.diff(q, axis=1) >= -1e-9).all()

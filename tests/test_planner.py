@@ -1,0 +1,59 @@
+"""Knob planner: the jit Lagrangian solver must match scipy's LP exactly
+(feasibility + optimal value) — property-based over random instances."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import plan_value, solve_lp_lagrangian, solve_lp_scipy
+
+
+@st.composite
+def lp_instance(draw):
+    C = draw(st.integers(2, 8))
+    K = draw(st.integers(2, 10))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    qual = rng.random((C, K)).astype(np.float32)
+    cost = (rng.random(K) * 10 + 0.05).astype(np.float32)
+    r = rng.random(C).astype(np.float32) + 0.01
+    r /= r.sum()
+    budget = float(rng.random() * 12)
+    return qual, cost, r, budget
+
+
+@settings(max_examples=60, deadline=None)
+@given(lp_instance())
+def test_lagrangian_matches_scipy(inst):
+    qual, cost, r, budget = inst
+    a_ref = solve_lp_scipy(qual, cost, r, budget)
+    a = np.asarray(solve_lp_lagrangian(jnp.asarray(qual), jnp.asarray(cost),
+                                       jnp.asarray(r), budget))
+    q_ref, s_ref = plan_value(jnp.asarray(a_ref), jnp.asarray(qual),
+                              jnp.asarray(cost), jnp.asarray(r))
+    q, s = plan_value(jnp.asarray(a), jnp.asarray(qual), jnp.asarray(cost),
+                      jnp.asarray(r))
+    # feasible (up to the scipy fallback when the budget is infeasible)
+    assert s <= max(budget, s_ref) + 1e-3
+    # optimal
+    assert q >= q_ref - 1e-3
+    # rows are distributions
+    np.testing.assert_allclose(a.sum(1), 1.0, atol=1e-4)
+    assert (a >= -1e-6).all()
+
+
+def test_affordable_budget_picks_best():
+    qual = np.array([[0.2, 0.9], [0.4, 0.8]], np.float32)
+    cost = np.array([1.0, 2.0], np.float32)
+    r = np.array([0.5, 0.5], np.float32)
+    a = np.asarray(solve_lp_lagrangian(jnp.asarray(qual), jnp.asarray(cost),
+                                       jnp.asarray(r), 100.0))
+    assert a[0, 1] == 1.0 and a[1, 1] == 1.0
+
+
+def test_infeasible_budget_degrades_to_cheapest():
+    qual = np.array([[0.2, 0.9]], np.float32)
+    cost = np.array([1.0, 2.0], np.float32)
+    r = np.array([1.0], np.float32)
+    a = np.asarray(solve_lp_lagrangian(jnp.asarray(qual), jnp.asarray(cost),
+                                       jnp.asarray(r), 0.1))
+    assert a[0, 0] == pytest.approx(1.0, abs=1e-5)

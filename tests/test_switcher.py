@@ -1,0 +1,110 @@
+"""Knob switcher properties: the throughput guarantee (buffer can never
+exceed capacity), cloud-budget enforcement, and plan adherence."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.switcher import SwitchTables, init_state, run_window
+
+
+def make_tables(K=4, C=3, tau=2.0, cap=30.0, cloud=50.0, n_cores=4,
+                seed=0):
+    rng = np.random.default_rng(seed)
+    power = np.sort(rng.random(K)).astype(np.float32)
+    cost = np.sort(rng.random(K) * 20 + 0.5).astype(np.float32)
+    cost[0] = min(cost[0], tau * n_cores * 0.9)   # guarantee config
+    centers = np.sort(rng.random((C, K)), axis=0).astype(np.float32)
+    P = 3
+    rt = np.stack([cost / n_cores, cost / n_cores * 0.6,
+                   cost / n_cores * 0.3], 1)
+    cl = np.stack([np.zeros(K), cost * 0.4, cost * 0.7], 1)
+    on = np.stack([cost, cost * 0.6, cost * 0.3], 1)
+    return SwitchTables(
+        centers=jnp.asarray(centers), power=jnp.asarray(power),
+        cost=jnp.asarray(cost),
+        place_rt=jnp.asarray(rt, jnp.float32),
+        place_on=jnp.asarray(on, jnp.float32),
+        place_cl=jnp.asarray(cl, jnp.float32),
+        place_valid=jnp.ones((K, P), bool),
+        rank_pos=jnp.asarray(np.argsort(np.argsort(-power)), jnp.int32),
+        tau=tau, buffer_cap_s=cap, cloud_budget=cloud)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(20, 120),
+       st.floats(0.5, 4.0))
+def test_buffer_never_overflows(seed, T, arrival_peak):
+    """Paper Eq. 1: the guarantee must hold for ANY content/arrival."""
+    rng = np.random.default_rng(seed)
+    tables = make_tables(seed=seed % 7)
+    K = tables.n_configs
+    alpha = rng.random((tables.n_categories, K)).astype(np.float32)
+    alpha /= alpha.sum(1, keepdims=True)
+    quals = jnp.asarray(rng.random((T, K)), jnp.float32)
+    arrivals = jnp.asarray(
+        1.0 + (arrival_peak - 1.0) * rng.random(T), jnp.float32)
+    state = init_state(tables)
+    state, outs = run_window(state, quals, arrivals, jnp.asarray(alpha),
+                             tables)
+    buf = np.asarray(outs["buffer_s"])
+    assert (buf <= tables.buffer_cap_s + 1e-3).all(), buf.max()
+    # cloud budget respected
+    assert float(state["cloud_spent"]) <= tables.cloud_budget + 1e-3
+
+
+def test_plan_adherence_when_unconstrained():
+    """With a huge buffer/budget the realized per-category config mix
+    must converge to the planned histogram (Eq. 6)."""
+    tables = make_tables(cap=1e9, cloud=1e9)
+    C, K = tables.n_categories, tables.n_configs
+    rng = np.random.default_rng(0)
+    alpha = np.zeros((C, K), np.float32)
+    alpha[:, 1] = 0.25
+    alpha[:, 3] = 0.75
+    T = 4000
+    quals = jnp.asarray(rng.random((T, K)), jnp.float32)
+    arrivals = jnp.ones((T,), jnp.float32)
+    state = init_state(tables)
+    state, outs = run_window(state, quals, arrivals, jnp.asarray(alpha),
+                             tables)
+    used = np.asarray(state["used"])
+    frac = used.sum(0) / used.sum()
+    np.testing.assert_allclose(frac[3], 0.75, atol=0.05)
+    np.testing.assert_allclose(frac[1], 0.25, atol=0.05)
+
+
+def test_degrades_under_pressure():
+    """Tiny buffer + no cloud -> must fall back to cheap configs, never
+    overflow."""
+    tables = make_tables(cap=1.0, cloud=0.0)
+    C, K = tables.n_categories, tables.n_configs
+    alpha = np.zeros((C, K), np.float32)
+    alpha[:, K - 1] = 1.0   # plan demands the most expensive config
+    rng = np.random.default_rng(1)
+    T = 500
+    quals = jnp.asarray(rng.random((T, K)), jnp.float32)
+    arrivals = jnp.ones((T,), jnp.float32)
+    state = init_state(tables)
+    state, outs = run_window(state, quals, arrivals, jnp.asarray(alpha),
+                             tables)
+    assert float(np.asarray(outs["buffer_s"]).max()) <= 1.0 + 1e-4
+    assert float(state["cloud_spent"]) == 0.0
+
+
+def test_switch_latency_under_half_ms():
+    """Paper §5.5: tuning decision < 0.5 ms. Ours is jit-compiled."""
+    import time
+
+    from repro.core.switcher import switch_step
+    tables = make_tables()
+    state = init_state(tables)
+    alpha = jnp.ones((tables.n_categories, tables.n_configs)) / tables.n_configs
+    q = jnp.ones((tables.n_configs,)) * 0.5
+    s2, out = switch_step(state, q, jnp.float32(1.0), alpha, tables)  # warmup
+    t0 = time.perf_counter()
+    N = 200
+    for _ in range(N):
+        s2, out = switch_step(s2, q, jnp.float32(1.0), alpha, tables)
+    _ = float(out["qual"])
+    per_call = (time.perf_counter() - t0) / N
+    assert per_call < 0.5e-3, f"{per_call * 1e6:.0f}us"

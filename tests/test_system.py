@@ -1,0 +1,24 @@
+"""Top-level system behaviour: the V-ETL definition's two constraints
+(Eq. 1 throughput, budget) hold simultaneously on every workload."""
+import numpy as np
+import pytest
+
+from repro.configs.workloads import WORKLOADS
+from repro.core import ingest as IG
+from repro.core.offline import fit
+from repro.data.stream import generate
+
+
+@pytest.mark.parametrize("wname", sorted(WORKLOADS))
+def test_vetl_constraints_hold(wname):
+    w = WORKLOADS[wname]
+    f = fit(w, n_cores=16, days_unlabeled=3.0,
+            n_categories=4 if wname in ("covid", "mot") else 5, seed=0)
+    s = generate(w, days=0.5, seed=11)
+    res = IG.run_skyscraper(f, s, n_cores=16, cloud_budget_core_s=5_000.0,
+                            buffer_gb=1.0, plan_days=0.1)
+    cap_s = 1.0 * 1e9 / 90e3
+    assert res.buffer_peak_s <= cap_s + 1e-3          # Eq. 1
+    assert res.cloud_core_s <= 5_000.0 + 1e-3         # budget
+    assert not res.overflow
+    assert res.quality_pct > 50.0
