@@ -2,6 +2,24 @@
 stream on constrained hardware with buffering + cloud bursting.
 
     PYTHONPATH=src python examples/vetl_ingest.py
+
+Multi-stream ingestion (paper App. D) rides the batched switcher engine:
+V streams share one joint LP plan and ONE fused ``lax.scan`` executes
+every stream's knob decisions — per-window dispatch cost is constant in
+V (see benchmarks/multi_stream_bench.py)::
+
+    from repro.core import ingest as IG
+    from repro.core.offline import fit
+    from repro.data.stream import generate
+
+    fitted = fit(COVID, n_cores=8, days_unlabeled=3.0)
+    streams = [generate(COVID, days=1.0, seed=s) for s in range(8)]
+    res = IG.run_skyscraper_multi([fitted] * 8, streams, n_cores_each=8,
+                                  cloud_budget_core_s=8000.0)
+    print(res["quality_pct"], res["per_stream_pct"])
+
+For online serving (one decision per arriving segment across V live
+cameras in a single dispatch) use ``repro.core.api.SkyscraperPool``.
 """
 import sys
 import os

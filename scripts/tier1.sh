@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): the full test suite on CPU.
+#
+#   scripts/tier1.sh [extra pytest args...]
+#
+# Honors an existing XLA_FLAGS; otherwise forces a single host device so
+# smoke tests see a deterministic topology (the sharding tests fork their
+# own 8-device subprocesses).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest -x -q "$@"

@@ -3,8 +3,12 @@
 - Atomic saves (write to tmp, fsync, rename) so a crash mid-save never
   corrupts the latest checkpoint.
 - Mesh-agnostic format: arrays are gathered to host numpy and stored
-  flat (msgpack + zstd), so restore() can reshard onto ANY mesh — the
-  elastic-scaling path after node loss.
+  flat (msgpack + compression), so restore() can reshard onto ANY mesh —
+  the elastic-scaling path after node loss.
+- Compression: zstd when the optional ``zstandard`` package is
+  installed, stdlib zlib otherwise. Files carry a format-tagged header
+  (``RSK1`` + codec byte) so either writer's checkpoints restore under
+  either environment; legacy untagged zstd frames are still read.
 - Retention: keep the last N checkpoints; ``latest_step`` enables
   auto-resume in launch/train.py.
 """
@@ -13,13 +17,49 @@ from __future__ import annotations
 import io
 import os
 import re
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # optional dep: fall back to stdlib zlib
+    zstd = None
+
+_MAGIC = b"RSK1"
+_CODEC_ZSTD = b"z"
+_CODEC_ZLIB = b"d"
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"   # legacy untagged files
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return _MAGIC + _CODEC_ZSTD + zstd.ZstdCompressor(level=3).compress(raw)
+    return _MAGIC + _CODEC_ZLIB + zlib.compress(raw, level=6)
+
+
+def _decompress(buf: bytes) -> bytes:
+    if buf[:4] == _MAGIC:
+        codec, body = buf[4:5], buf[5:]
+        if codec == _CODEC_ZLIB:
+            return zlib.decompress(body)
+        if codec == _CODEC_ZSTD:
+            if zstd is None:
+                raise ImportError(
+                    "checkpoint was written with zstd but the 'zstandard' "
+                    "package is not installed (see requirements-dev.txt)")
+            return zstd.ZstdDecompressor().decompress(body)
+        raise ValueError(f"unknown checkpoint codec tag {codec!r}")
+    if buf[:4] == _ZSTD_FRAME_MAGIC:       # pre-header checkpoints
+        if zstd is None:
+            raise ImportError(
+                "legacy zstd checkpoint needs the 'zstandard' package")
+        return zstd.ZstdDecompressor().decompress(buf)
+    return zlib.decompress(buf)
 
 
 def _flatten(tree, prefix=""):
@@ -71,7 +111,7 @@ def save(path: str, tree, step: Optional[int] = None, keep: int = 3):
         payload[k] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
                       "data": arr.tobytes()}
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     tmp = final + ".tmp"
     with open(tmp, "wb") as f:
         f.write(comp)
@@ -101,7 +141,7 @@ def restore(path: str, step: Optional[int] = None, *, mesh=None,
     if step is not None:
         path = os.path.join(path, f"ckpt_{step:08d}.rsk")
     with open(path, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     flat = {}
     for k, v in payload.items():

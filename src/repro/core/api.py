@@ -26,7 +26,8 @@ from repro.core.categories import kmeans
 from repro.core.forecaster import (forecast, init_forecaster, make_dataset,
                                    train_forecaster)
 from repro.core.planner import solve_lp_lagrangian
-from repro.core.switcher import SwitchTables, init_state, switch_step
+from repro.core.switcher import (SwitchTables, init_state, init_state_multi,
+                                 stack_tables, switch_step, switch_step_multi)
 
 
 class Skyscraper:
@@ -167,3 +168,80 @@ class Skyscraper:
         return {"config": self.configs[k], "k": k, "category": int(out["c"]),
                 "quality": float(q),
                 "buffer_s": float(out["buffer_s"])}, result
+
+
+class SkyscraperPool:
+    """V live streams sharing one fitted profile, switched by the batched
+    engine: ONE vmapped jit dispatch decides all V knob configs per tick
+    (paper App. D scenario 1 as an online serving loop).
+
+        pool = SkyscraperPool(fitted_sky, n_streams=8)
+        statuses, outputs = pool.process([seg0, ..., seg7])
+    """
+
+    def __init__(self, sky: Skyscraper, n_streams: int):
+        assert sky._fitted, "fit() the Skyscraper first"
+        self.sky = sky
+        self.V = n_streams
+        # per-stream buffer/cloud state over shared tables
+        self.tables = stack_tables([sky.tables] * n_streams)
+        self.state = init_state_multi([sky.tables] * n_streams)
+        # per-stream category history, bounded to what replanning reads
+        from collections import deque
+        self._hist_len = sky.n_split * sky.interval
+        self._labels_hist = [deque(maxlen=self._hist_len)
+                             for _ in range(n_streams)]
+        self._alpha = jnp.broadcast_to(
+            sky.alpha, (n_streams,) + sky.alpha.shape)
+        self._seen = 0
+
+    def _replan(self):
+        """Per-stream plans from each stream's OWN recorded categories
+        (forecast -> LP), mirroring Skyscraper._replan."""
+        sky = self.sky
+        C = sky.centers.shape[0]
+        alphas = []
+        for hist in self._labels_hist:
+            if len(hist) >= self._hist_len:
+                lab = np.asarray(hist)
+                oh = np.eye(C, dtype=np.float32)[lab]
+                h = oh.reshape(sky.n_split, sky.interval, C).mean(1)
+                r = np.asarray(forecast(sky.forecaster, jnp.asarray(h)))
+            else:
+                r = np.full(C, 1.0 / C)
+            budget = (sky.budget_override
+                      if getattr(sky, "budget_override", None)
+                      else sky.num_cores * sky.tau)
+            alphas.append(solve_lp_lagrangian(
+                jnp.asarray(sky.centers), sky.tables.cost,
+                jnp.asarray(r, jnp.float32), jnp.float32(budget)))
+        self._alpha = jnp.stack(alphas)
+
+    def process(self, segments, arrival_mults: Optional[Sequence] = None):
+        """One batched switch decision + per-stream Transform execution.
+        segments: length-V list (one per stream)."""
+        assert len(segments) == self.V
+        K = len(self.sky.configs)
+        arr = jnp.asarray(arrival_mults if arrival_mults is not None
+                          else np.ones(self.V), jnp.float32)
+        dummy = jnp.zeros((self.V, K), jnp.float32)
+        self.state, outs = switch_step_multi(self.state, dummy, arr,
+                                             self._alpha, self.tables)
+        ks = np.asarray(outs["k"])
+        statuses, results, q_meas = [], [], np.zeros(self.V, np.float32)
+        for v, seg in enumerate(segments):
+            result, q = self.sky.proc_fn(seg, self.sky.configs[int(ks[v])])
+            q_meas[v] = q
+            results.append(result)
+            self._labels_hist[v].append(int(np.asarray(outs["c"])[v]))
+            statuses.append({"config": self.sky.configs[int(ks[v])],
+                             "k": int(ks[v]),
+                             "category": int(np.asarray(outs["c"])[v]),
+                             "quality": float(q),
+                             "buffer_s": float(np.asarray(outs["buffer_s"])[v])})
+        # report measured qualities back (drive the next classification)
+        self.state["qual_prev"] = jnp.asarray(q_meas)
+        self._seen += 1
+        if self._seen % self.sky._plan_every == 0:
+            self._replan()
+        return statuses, results

@@ -19,7 +19,9 @@ import numpy as np
 from repro.core.forecaster import forecast
 from repro.core.offline import Fitted
 from repro.core.planner import solve_lp_lagrangian
-from repro.core.switcher import SwitchTables, init_state, run_window
+from repro.core.switcher import (SwitchTables, init_state, init_state_multi,
+                                 pad_window, pad_window_multi, run_window,
+                                 run_window_multi, stack_tables)
 from repro.data.stream import Stream
 
 CLOUD_PREMIUM = 1.8      # App. L
@@ -107,11 +109,14 @@ def run_skyscraper(fitted: Fitted, stream: Stream, *, n_cores: int,
                                     jnp.float32(budget / W_t))
         plans.append((np.asarray(r), np.asarray(alpha)))
         # ---- reactive switching over the window --------------------------
-        state, outs = run_window(state, quals[t:t + W_t],
-                                 arrivals[t:t + W_t], alpha, tables)
+        # pad the (possibly short) tail window to the fixed length W so
+        # every window lowers to the same jaxpr — zero recompiles after
+        # the first window; masked padding steps are exact no-ops.
+        q_w, a_w, valid = pad_window(quals[t:t + W_t], arrivals[t:t + W_t], W)
+        state, outs = run_window(state, q_w, a_w, alpha, tables, valid=valid)
         for kk in outs_all:
-            outs_all[kk].append(np.asarray(outs[kk]))
-        labels_hist.append(np.asarray(outs["c"]))
+            outs_all[kk].append(np.asarray(outs[kk])[:W_t])
+        labels_hist.append(np.asarray(outs["c"])[:W_t])
         t += W_t
         # App. E.2: continuous online fine-tuning of the forecaster on
         # the categories the switcher itself has been recording
@@ -150,43 +155,70 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
     """Multi-stream ingestion (paper App. D, scenario 1): each stream has
     its own cores + buffer; the cloud budget and the knob PLAN are joint —
     one LP over all streams' categories so the shared budget flows to the
-    stream where it buys the most quality."""
+    stream where it buys the most quality.
+
+    Batched engine: per window, the joint LP produces a (V, C, K) alpha
+    stack and ONE fused ``lax.scan`` (``run_window_multi``) executes all
+    V streams' switch decisions — one dispatch per window instead of V,
+    and windows are padded to the fixed plan length so nothing recompiles
+    after warmup. Streams may have different category counts; shorter
+    category tables are padded with sentinel centers that never classify.
+    """
     from repro.core.planner import solve_multi_stream
+    import dataclasses as _dc
     V = len(fitteds)
     tau = fitteds[0].workload.segment_seconds
     W = max(1, int(plan_days * 86400 / tau))
     T = min(s.n_segments for s in streams)
-    tables = [f.tables(buffer_gb=buffer_gb,
-                       cloud_budget=cloud_budget_core_s / V)
-              for f in fitteds]
-    quals = [jnp.asarray(s.quality(f.power, seed=seed))
-             for s, f in zip(streams, fitteds)]
-    arrs = [jnp.asarray(s.arrival, jnp.float32) for s in streams]
-    states = [init_state(tb) for tb in tables]
+    K = len(fitteds[0].configs)
+    assert all(len(f.configs) == K for f in fitteds), \
+        "joint plan shares one cost table: config counts must match"
+    Cs = [f.centers.shape[0] for f in fitteds]
+    C_max = max(Cs)
+    tables = []
+    for f, C_v in zip(fitteds, Cs):
+        tb = f.tables(buffer_gb=buffer_gb,
+                      cloud_budget=cloud_budget_core_s / V)
+        if C_v < C_max:
+            # sentinel rows: |center - qual| is huge, so argmin never
+            # classifies a segment into a padding category
+            pad = jnp.full((C_max - C_v, K), 1e6, jnp.float32)
+            tb = _dc.replace(tb, centers=jnp.concatenate([tb.centers, pad]))
+        tables.append(tb)
+    tab_stack = stack_tables(tables)
+    state = init_state_multi(tables)
+    quals = jnp.stack([jnp.asarray(s.quality(f.power, seed=seed))[:T]
+                       for s, f in zip(streams, fitteds)])      # (V,T,K)
+    arrs = jnp.stack([jnp.asarray(s.arrival[:T], jnp.float32)
+                      for s in streams])                        # (V,T)
+    qmax = np.stack([np.asarray(_max_quality(s, f.power))[:T]
+                     for s, f in zip(streams, fitteds)]).sum(axis=1)
     sums = np.zeros(V)
-    qmax = np.zeros(V)
     t = 0
     while t < T:
         W_t = min(W, T - t)
         # joint plan: per-stream oracle r over the window (App. D Eq. 7-9)
-        rs, qs, costs = [], [], None
+        rs, qs = [], []
         for v in range(V):
-            q_true = np.asarray(quals[v][t:t + W_t])
+            q_true = np.asarray(quals[v, t:t + W_t])
             d = ((q_true[:, None, :] - fitteds[v].centers[None]) ** 2).sum(-1)
             lab = d.argmin(1)
-            rs.append(np.bincount(lab, minlength=fitteds[v].centers.shape[0])
-                      / W_t)
+            rs.append(np.bincount(lab, minlength=Cs[v]) / W_t)
             qs.append(fitteds[v].centers)
         budget = V * n_cores_each * tau + (cloud_budget_core_s / CLOUD_PREMIUM
                                            * W_t / T)
         alphas = solve_multi_stream(qs, fitteds[0].cost, rs, budget)
-        for v in range(V):
-            states[v], outs = run_window(states[v], quals[v][t:t + W_t],
-                                         arrs[v][t:t + W_t],
-                                         jnp.asarray(alphas[v]), tables[v])
-            sums[v] += float(np.asarray(outs["qual"]).sum())
-            qmax[v] += float(_max_quality(streams[v], fitteds[v].power
-                                          )[t:t + W_t].sum())
+        a_stack = np.zeros((V, C_max, K), np.float32)
+        for v, a in enumerate(alphas):
+            a_stack[v, :Cs[v]] = np.asarray(a)
+        # pad the tail window to W (masked steps are exact no-ops) and
+        # run ALL streams through the single fused scan
+        q_w, a_w, valid = pad_window_multi(quals[:, t:t + W_t],
+                                           arrs[:, t:t + W_t], W)
+        state, outs = run_window_multi(state, q_w, a_w,
+                                       jnp.asarray(a_stack), tab_stack,
+                                       valid=valid)
+        sums += np.asarray(outs["qual"]).sum(axis=1)   # padding is zeroed
         t += W_t
     return {"quality_pct": 100.0 * sums.sum() / max(qmax.sum(), 1e-9),
             "per_stream_pct": (100.0 * sums / np.maximum(qmax, 1e-9)).tolist()}

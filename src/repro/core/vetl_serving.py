@@ -60,6 +60,25 @@ class BackboneVETL:
             self._fwd[name] = f
         return self._fwd[name]
 
+    def _forward_batched(self, name):
+        """vmapped certainty over a leading stream axis: tokens (N,F,S)
+        -> (N,) per-stream quality in ONE dispatch."""
+        key = ("batched", name)
+        if key not in self._fwd:
+            m, _ = self.models[name]
+
+            @jax.jit
+            def f(params, tokens):
+                def one(tk):
+                    logits = m.forward_logits(params, {"tokens": tk})
+                    p = jax.nn.softmax(logits, axis=-1)
+                    return jnp.mean(jnp.max(p, axis=-1))
+
+                return jax.vmap(one)(tokens)
+
+            self._fwd[key] = f
+        return self._fwd[key]
+
     def proc_fn(self, segment, knobs):
         """segment: dict(frames=(F,H,W,C) float32, tokens=(F,S) int32).
         Returns (detections stub, quality)."""
@@ -73,3 +92,30 @@ class BackboneVETL:
         # certainty as the quality proxy; frames touched to emulate the
         # pixel path (downsample kernel exercised above)
         return {"n_frames": frames.shape[0]}, float(cert)
+
+    def proc_batch(self, segments, knob_list):
+        """Multi-stream Transform: segments/knob_list are per-stream (the
+        batched switcher's V decisions). Streams whose knobs selected the
+        SAME backbone + sampling are stacked and run through one vmapped
+        forward — per-model-group dispatch instead of per-stream.
+        Returns (results, qualities) in input order."""
+        groups: Dict[tuple, list] = {}
+        for i, (seg, kv) in enumerate(zip(segments, knob_list)):
+            gkey = (kv.get("model_size", "small"),
+                    kv.get("sample_every", 1), seg["tokens"].shape)
+            groups.setdefault(gkey, []).append(i)
+        results = [None] * len(segments)
+        quals = [0.0] * len(segments)
+        for (name, sample, _), idxs in groups.items():
+            toks = jnp.stack([segments[i]["tokens"][::sample] for i in idxs])
+            _, params = self.models[name]
+            certs = self._forward_batched(name)(params, toks)
+            for j, i in enumerate(idxs):
+                kv = knob_list[i]
+                frames = segments[i]["frames"][::sample]
+                res = kv.get("resolution", 1)
+                if res > 1:
+                    frames = ops.downsample(frames, factor=res, block=16)
+                results[i] = {"n_frames": frames.shape[0]}
+                quals[i] = float(certs[j])
+        return results, quals

@@ -34,6 +34,43 @@ _COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-_]+)\s*\(.*\)\s*->.*\{")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
 _BODY_RE = re.compile(r"body=%?([\w\.\-_]+)")
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-_]+)")
+# one operand, with or without its inline type: older XLA prints
+# ``dot(%a, %b)``; newer prints ``dot(f32[128,64]{1,0} %a, ...)`` and
+# TPU lowers add tiled layouts ``f32[128,64]{1,0:T(8,128)}``
+_OPND_RE = re.compile(
+    r"(?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%([\w\.\-_]+)")
+
+
+def _call_operands(line: str, opcode: str):
+    """[(inline_type_or_None, operand_name), ...] of an op's call args.
+    Tiled layout annotations contain parens (``{1,0:T(8,128)}``), so the
+    operand list ends at the ')' that closes '<opcode>(' at depth 0 —
+    not at the first ')' in the line."""
+    i = line.find(opcode + "(")
+    if i < 0:
+        return []
+    start = i + len(opcode) + 1
+    depth = 1
+    end = start
+    for end in range(start, len(line)):
+        ch = line[end]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    return [(t or None, n)
+            for t, n in _OPND_RE.findall(line[start:end])]
+
+
+def cost_analysis_dict(compiled) -> Dict:
+    """``compiled.cost_analysis()`` normalized across jax versions:
+    jax<0.5 returns a per-device list of dicts, newer returns one dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 
 
 def _shape_bytes(type_str: str) -> int:
@@ -101,23 +138,21 @@ def analyze(hlo_text: str) -> Dict:
         elif base in ("dot", "convolution"):
             dims, out_elems = _shape_elems(rtype)
             # contracted size from lhs operand shape + contracting dims
-            mops = re.search(r"\(([%\w\.\-_]+),\s*([%\w\.\-_]+)\)", line)
+            ops = _call_operands(line, opcode)
             md = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
             contracted = 1
             dot_io = out_bytes
-            if mops:
-                for opd in mops.groups():
-                    t = result_types.get(opd.lstrip("%"))
-                    if t:
-                        dot_io += _shape_bytes(t)
-                if md:
-                    lt = result_types.get(mops.group(1).lstrip("%"))
-                    if lt:
-                        ldims, _ = _shape_elems(lt)
-                        if ldims:
-                            for ci in md.group(1).split(","):
-                                if ci:
-                                    contracted *= ldims[int(ci)]
+            op_types = [t if t is not None else result_types.get(n)
+                        for t, n in ops]
+            for t in op_types:
+                if t:
+                    dot_io += _shape_bytes(t)
+            if md and op_types and op_types[0]:
+                ldims, _ = _shape_elems(op_types[0])
+                if ldims:
+                    for ci in md.group(1).split(","):
+                        if ci:
+                            contracted *= ldims[int(ci)]
             c["dot_flops"] += 2 * out_elems * contracted
             c["dot_bytes"] += dot_io
         elif base == "fusion":

@@ -5,11 +5,21 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist from jax 0.5; on older
+    releases every axis is implicitly Auto, so simply omit the kwarg."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
@@ -17,5 +27,4 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     model_axis = min(model_axis, n)
     data_axis = n // model_axis
-    return jax.make_mesh((data_axis, model_axis), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data_axis, model_axis), ("data", "model"))

@@ -1,0 +1,144 @@
+"""Batched multi-stream switcher engine: the fused V-stream scan must be
+bit-identical to V independent per-stream scans, padded tail windows must
+be exact no-ops, and repeated fixed-length windows must never recompile."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.switcher import (compile_cache_size, init_state,
+                                 init_state_multi, pad_window, run_window,
+                                 run_window_multi, stack_tables,
+                                 switch_step_multi)
+from test_switcher import make_tables
+
+TRACE_KEYS = ("k", "p", "c", "qual", "on_s", "cl_s", "buffer_s", "rt",
+              "dropped")
+
+
+def _make_streams(V=4, T=160, seed=0):
+    rng = np.random.default_rng(seed)
+    tables = [make_tables(seed=v, cap=20.0 + 5 * v, cloud=40.0 + 10 * v)
+              for v in range(V)]
+    C, K = tables[0].n_categories, tables[0].n_configs
+    alphas = rng.random((V, C, K)).astype(np.float32)
+    alphas /= alphas.sum(-1, keepdims=True)
+    quals = rng.random((V, T, K)).astype(np.float32)
+    arrivals = (0.5 + 2.5 * rng.random((V, T))).astype(np.float32)
+    return tables, jnp.asarray(alphas), jnp.asarray(quals), \
+        jnp.asarray(arrivals)
+
+
+def test_batched_scan_bit_identical_to_per_stream():
+    """One fused scan over V streams == V independent run_window calls,
+    bit for bit, on every trace and on the final state — including
+    per-stream heterogeneous buffer caps and cloud budgets."""
+    V, T = 4, 160
+    tables, alphas, quals, arrivals = _make_streams(V, T)
+    # reference: V independent per-stream scans
+    ref_outs, ref_states = [], []
+    for v in range(V):
+        st, outs = run_window(init_state(tables[v]), quals[v], arrivals[v],
+                              alphas[v], tables[v])
+        ref_states.append(st)
+        ref_outs.append(outs)
+    # batched: single fused scan
+    state, outs = run_window_multi(init_state_multi(tables), quals,
+                                   arrivals, alphas, stack_tables(tables))
+    for key in TRACE_KEYS:
+        got = np.asarray(outs[key])
+        for v in range(V):
+            np.testing.assert_array_equal(
+                got[v], np.asarray(ref_outs[v][key]),
+                err_msg=f"trace {key!r} diverged for stream {v}")
+    for key in ref_states[0]:
+        got = np.asarray(state[key])
+        for v in range(V):
+            np.testing.assert_array_equal(
+                got[v], np.asarray(ref_states[v][key]),
+                err_msg=f"final state {key!r} diverged for stream {v}")
+
+
+def test_padded_tail_window_masked_segments_are_noops():
+    """A window padded from T to W must (a) reproduce the unpadded run on
+    the real prefix, (b) contribute ZERO quality/work/cloud for the
+    padding, and (c) leave the state exactly where the unpadded run did."""
+    tables = make_tables(seed=3)
+    K, C = tables.n_configs, tables.n_categories
+    rng = np.random.default_rng(7)
+    T, W = 110, 256
+    alpha = jnp.asarray(rng.random((C, K)).astype(np.float32))
+    quals = jnp.asarray(rng.random((T, K)), jnp.float32)
+    arrivals = jnp.asarray(0.5 + rng.random(T), jnp.float32)
+
+    st_ref, outs_ref = run_window(init_state(tables), quals, arrivals,
+                                  alpha, tables)
+    q_pad, a_pad, valid = pad_window(quals, arrivals, W)
+    assert q_pad.shape == (W, K) and int(valid.sum()) == T
+    st_pad, outs_pad = run_window(init_state(tables), q_pad, a_pad, alpha,
+                                  tables, valid=valid)
+    # (a) real prefix identical
+    for key in TRACE_KEYS:
+        np.testing.assert_array_equal(np.asarray(outs_pad[key])[:T],
+                                      np.asarray(outs_ref[key]),
+                                      err_msg=f"prefix {key!r}")
+    # (b) padding contributes zero quality and zero work
+    tail = {k: np.asarray(v)[T:] for k, v in outs_pad.items()}
+    assert np.all(tail["qual"] == 0.0)
+    assert np.all(tail["on_s"] == 0.0)
+    assert np.all(tail["cl_s"] == 0.0)
+    assert np.all(tail["rt"] == 0.0)
+    assert not tail["dropped"].any()
+    # buffer frozen at its end-of-data value (no drain, no fill)
+    assert np.all(tail["buffer_s"] == np.asarray(st_ref["buffer_s"]))
+    # (c) final state untouched by the padding
+    for key in st_ref:
+        np.testing.assert_array_equal(np.asarray(st_pad[key]),
+                                      np.asarray(st_ref[key]),
+                                      err_msg=f"state {key!r}")
+
+
+def test_fixed_window_padding_compiles_once():
+    """Many windows (including short tails) padded to one fixed W must
+    reuse a single executable — zero recompiles after warmup."""
+    tables = make_tables(seed=1)
+    K, C = tables.n_configs, tables.n_categories
+    rng = np.random.default_rng(1)
+    W = 64
+    alpha = jnp.asarray(rng.random((C, K)).astype(np.float32))
+    state = init_state(tables)
+    single0, _ = compile_cache_size()
+    for T in (64, 64, 40, 64, 7):          # tails of varying length
+        quals = jnp.asarray(rng.random((T, K)), jnp.float32)
+        arrivals = jnp.ones((T,), jnp.float32)
+        q, a, valid = pad_window(quals, arrivals, W)
+        state, _ = run_window(state, q, a, alpha, tables, valid=valid)
+    single1, _ = compile_cache_size()
+    assert single1 - single0 <= 1, "padded windows must share one compile"
+
+
+def test_switch_step_multi_matches_sequential_steps():
+    """The single-dispatch batched decision (serving path) agrees with V
+    independent switch_step calls."""
+    from repro.core.switcher import switch_step
+    V = 3
+    tables = [make_tables(seed=v) for v in range(V)]
+    K, C = tables[0].n_configs, tables[0].n_categories
+    rng = np.random.default_rng(2)
+    alphas = rng.random((V, C, K)).astype(np.float32)
+    q_rows = rng.random((V, K)).astype(np.float32)
+    arr = (0.5 + rng.random(V)).astype(np.float32)
+    ref = [switch_step(init_state(tb), jnp.asarray(q_rows[v]),
+                       jnp.float32(arr[v]), jnp.asarray(alphas[v]), tb)
+           for v, tb in enumerate(tables)]
+    state, outs = switch_step_multi(init_state_multi(tables),
+                                    jnp.asarray(q_rows), jnp.asarray(arr),
+                                    jnp.asarray(alphas),
+                                    stack_tables(tables))
+    for v, (st_v, out_v) in enumerate(ref):
+        for key in out_v:
+            np.testing.assert_array_equal(np.asarray(outs[key])[v],
+                                          np.asarray(out_v[key]),
+                                          err_msg=f"out {key!r} stream {v}")
+        for key in st_v:
+            np.testing.assert_array_equal(np.asarray(state[key])[v],
+                                          np.asarray(st_v[key]),
+                                          err_msg=f"state {key!r} stream {v}")
