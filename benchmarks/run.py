@@ -8,12 +8,13 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablation, cost_quality, design_alternatives,
-                            forecaster_bench, kernels_bench,
-                            multi_stream_bench, offline_phase, overheads,
-                            roofline, switcher_accuracy)
+                            forecaster_bench, fused_ingest_bench,
+                            kernels_bench, multi_stream_bench, offline_phase,
+                            overheads, roofline, switcher_accuracy)
     print("name,us_per_call,derived")
     modules = [
         ("overheads(Fig13)", overheads),
+        ("fused_ingest", fused_ingest_bench),
         ("multi_stream(AppD)", multi_stream_bench),
         ("offline_phase(Table3)", offline_phase),
         ("kernels", kernels_bench),

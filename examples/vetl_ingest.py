@@ -3,23 +3,39 @@ stream on constrained hardware with buffering + cloud bursting.
 
     PYTHONPATH=src python examples/vetl_ingest.py
 
-Multi-stream ingestion (paper App. D) rides the batched switcher engine:
-V streams share one joint LP plan and ONE fused ``lax.scan`` executes
-every stream's knob decisions — per-window dispatch cost is constant in
-V (see benchmarks/multi_stream_bench.py)::
+Whole-run fused engine: ``run_skyscraper_fused`` compiles the ENTIRE
+online phase — forecast, LP planning, and reactive switching for every
+planning window — into one ``lax.scan`` program, so a T-segment run is
+a single dispatch instead of T/W host round-trips (>=5x faster at
+T>=10k, see benchmarks/fused_ingest_bench.py) and reproduces the
+windowed loop's results to float32 tolerance::
 
     from repro.core import ingest as IG
     from repro.core.offline import fit
     from repro.data.stream import generate
 
-    fitted = fit(COVID, n_cores=8, days_unlabeled=3.0)
+    fitted = fit(COVID, n_cores=8, days_unlabeled=6.0)
+    stream = generate(COVID, days=1.0, seed=99)
+    res = IG.run_skyscraper_fused(fitted, stream, n_cores=8,
+                                  cloud_budget_core_s=15_000.0,
+                                  forecast_mode="model")   # | oracle | uniform
+    print(res.quality_pct, res.cloud_core_s)
+
+Multi-stream ingestion (paper App. D) gets the same treatment: the
+joint LP over all streams' categories runs ON DEVICE inside the outer
+scan (``solve_lp_stacked`` on the sentinel-padded (V, C_max, K) category
+stack), so ``run_skyscraper_multi`` performs zero host planning work::
+
     streams = [generate(COVID, days=1.0, seed=s) for s in range(8)]
     res = IG.run_skyscraper_multi([fitted] * 8, streams, n_cores_each=8,
                                   cloud_budget_core_s=8000.0)
     print(res["quality_pct"], res["per_stream_pct"])
 
 For online serving (one decision per arriving segment across V live
-cameras in a single dispatch) use ``repro.core.api.SkyscraperPool``.
+cameras in a single dispatch) use ``repro.core.api.SkyscraperPool`` —
+it runs on the same fused planning engine: per-stream label histories
+live in a device-side rolling buffer and replanning is one compiled
+vmapped forecast + LP call.
 """
 import sys
 import os
@@ -52,10 +68,11 @@ def main():
     print(f"forecaster val MAE: {fitted.forecast_metrics['val_mae']:.4f}")
 
     print("\n== online: 24h ingestion, 8 cores + 4GB buffer + cloud ==")
+    print("   (fused engine: the whole day is ONE compiled scan)")
     stream = generate(COVID, days=1.0, seed=99)
-    res = IG.run_skyscraper(fitted, stream, n_cores=8,
-                            cloud_budget_core_s=15_000.0, buffer_gb=4.0,
-                            plan_days=0.25)
+    res = IG.run_skyscraper_fused(fitted, stream, n_cores=8,
+                                  cloud_budget_core_s=15_000.0,
+                                  buffer_gb=4.0, plan_days=0.25)
     k = IG.best_static_config(fitted, 8)
     static = IG.run_static(fitted, stream, k, n_cores=8)
     opt = IG.run_optimum(fitted, stream, n_cores=8,

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): the full test suite on CPU.
 #
-#   scripts/tier1.sh [extra pytest args...]
+#   scripts/tier1.sh [--bench-smoke] [extra pytest args...]
+#
+# --bench-smoke additionally runs the fused-ingest benchmark in its
+# --tiny configuration after the tests, so the benchmark entry point
+# cannot silently rot.
 #
 # Honors an existing XLA_FLAGS; otherwise forces a single host device so
 # smoke tests see a deterministic topology (the sharding tests fork their
@@ -12,4 +16,20 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-exec python -m pytest -x -q "$@"
+BENCH_SMOKE=0
+args=()
+for a in "$@"; do
+  if [[ "$a" == "--bench-smoke" ]]; then
+    BENCH_SMOKE=1
+  else
+    args+=("$a")
+  fi
+done
+
+python -m pytest -x -q "${args[@]+"${args[@]}"}"
+
+if [[ "$BENCH_SMOKE" == "1" ]]; then
+  echo "== bench smoke: fused_ingest_bench --tiny =="
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fused_ingest_bench.py --tiny
+fi

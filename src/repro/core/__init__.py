@@ -2,25 +2,32 @@
 with throughput guarantees for V-ETL (see DESIGN.md §1)."""
 from repro.core.api import Skyscraper, SkyscraperPool
 from repro.core.categories import classify_1d, classify_full, kmeans
-from repro.core.forecaster import forecast, init_forecaster, train_forecaster
+from repro.core.forecaster import (forecast, forecast_from_labels,
+                                   init_forecaster, train_forecaster)
 from repro.core.ingest import (RunResult, best_static_config,
                                run_chameleon_star, run_optimum,
-                               run_skyscraper, run_skyscraper_multi,
+                               run_skyscraper, run_skyscraper_fused,
+                               run_skyscraper_multi,
+                               run_skyscraper_multi_windowed,
                                run_static, run_videostorm_like)
 from repro.core.offline import Fitted, fit
 from repro.core.planner import (plan_value, solve_lp_lagrangian,
-                                solve_lp_scipy, solve_multi_stream)
+                                solve_lp_rationed, solve_lp_scipy,
+                                solve_lp_stacked, solve_multi_stream)
 from repro.core.switcher import (SwitchTables, init_state, init_state_multi,
                                  pad_window, run_window, run_window_multi,
                                  stack_tables, switch_step, switch_step_multi)
 
 __all__ = [
     "Skyscraper", "SkyscraperPool", "classify_1d", "classify_full", "kmeans",
-    "forecast", "init_forecaster", "train_forecaster", "RunResult",
-    "best_static_config", "run_chameleon_star", "run_optimum",
-    "run_skyscraper", "run_skyscraper_multi", "run_static",
+    "forecast", "forecast_from_labels", "init_forecaster",
+    "train_forecaster", "RunResult", "best_static_config",
+    "run_chameleon_star", "run_optimum", "run_skyscraper",
+    "run_skyscraper_fused", "run_skyscraper_multi",
+    "run_skyscraper_multi_windowed", "run_static",
     "run_videostorm_like", "Fitted", "fit", "plan_value",
-    "solve_lp_lagrangian", "solve_lp_scipy", "solve_multi_stream",
+    "solve_lp_lagrangian", "solve_lp_rationed", "solve_lp_scipy",
+    "solve_lp_stacked", "solve_multi_stream",
     "SwitchTables", "init_state", "init_state_multi", "pad_window",
     "run_window", "run_window_multi", "stack_tables", "switch_step",
     "switch_step_multi",

@@ -15,19 +15,22 @@ switch -> execute.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.categories import kmeans
-from repro.core.forecaster import (forecast, init_forecaster, make_dataset,
-                                   train_forecaster)
+from repro.core.forecaster import (forecast_from_labels, init_forecaster,
+                                   make_dataset, train_forecaster)
 from repro.core.planner import solve_lp_lagrangian
 from repro.core.switcher import (SwitchTables, init_state, init_state_multi,
-                                 stack_tables, switch_step, switch_step_multi)
+                                 register_cache_probe, stack_tables,
+                                 switch_step, switch_step_multi)
 
 
 class Skyscraper:
@@ -134,11 +137,12 @@ class Skyscraper:
 
     def _replan(self):
         C = self.centers.shape[0]
-        if len(self._labels_hist) >= self.n_split * self.interval:
-            lab = np.asarray(self._labels_hist[-self.n_split * self.interval:])
-            oh = np.eye(C, dtype=np.float32)[lab]
-            hist = oh.reshape(self.n_split, self.interval, C).mean(1)
-            r = np.asarray(forecast(self.forecaster, jnp.asarray(hist)))
+        need = self.n_split * self.interval
+        if len(self._labels_hist) >= need:
+            lab = jnp.asarray(self._labels_hist[-need:], jnp.int32)
+            r = np.asarray(forecast_from_labels(
+                self.forecaster, lab, C, n_split=self.n_split,
+                interval=self.interval))
         else:
             r = np.full(C, 1.0 / C)
         budget = (self.budget_override if getattr(self, "budget_override",
@@ -170,10 +174,40 @@ class Skyscraper:
                 "buffer_s": float(out["buffer_s"])}, result
 
 
+@functools.partial(jax.jit, static_argnames=("n_split", "interval"))
+def _pool_replan(params, bufs, centers, cost, budget, use_model, *,
+                 n_split: int, interval: int):
+    """Device-side batched replanning for V streams: each stream's
+    rolling label buffer -> histogram features -> forecaster MLP -> LP,
+    all vmapped into one dispatch. ``use_model`` (traced bool) falls
+    back to the uniform prior until the buffers have filled once —
+    flipping it never recompiles."""
+    C = centers.shape[0]
+    r_model = jax.vmap(lambda b: forecast_from_labels(
+        params, b, C, n_split=n_split, interval=interval))(bufs)
+    r = jnp.where(use_model, r_model,
+                  jnp.full_like(r_model, 1.0 / C))
+    return jax.vmap(lambda rv: solve_lp_lagrangian(centers, cost, rv,
+                                                   budget))(r)
+
+
+_pool_shift = jax.jit(lambda bufs, c: jnp.concatenate(
+    [bufs[:, 1:], c[:, None].astype(jnp.int32)], axis=1))
+
+register_cache_probe("pool_replan", lambda: _pool_replan._cache_size())
+register_cache_probe("pool_shift", lambda: _pool_shift._cache_size())
+
+
 class SkyscraperPool:
     """V live streams sharing one fitted profile, switched by the batched
     engine: ONE vmapped jit dispatch decides all V knob configs per tick
     (paper App. D scenario 1 as an online serving loop).
+
+    Fused planning: per-stream category histories live in a device-side
+    rolling label buffer (V, hist_len) updated by a jitted shift each
+    tick, and replanning is ONE compiled call (vmapped forecaster +
+    stacked LP) — zero host-side planning work per tick, and the same
+    three executables (step / shift / replan) serve forever.
 
         pool = SkyscraperPool(fitted_sky, n_streams=8)
         statuses, outputs = pool.process([seg0, ..., seg7])
@@ -186,36 +220,25 @@ class SkyscraperPool:
         # per-stream buffer/cloud state over shared tables
         self.tables = stack_tables([sky.tables] * n_streams)
         self.state = init_state_multi([sky.tables] * n_streams)
-        # per-stream category history, bounded to what replanning reads
-        from collections import deque
+        # per-stream category history as a fixed-shape device carry
         self._hist_len = sky.n_split * sky.interval
-        self._labels_hist = [deque(maxlen=self._hist_len)
-                             for _ in range(n_streams)]
+        self._bufs = jnp.zeros((n_streams, self._hist_len), jnp.int32)
         self._alpha = jnp.broadcast_to(
             sky.alpha, (n_streams,) + sky.alpha.shape)
         self._seen = 0
 
     def _replan(self):
         """Per-stream plans from each stream's OWN recorded categories
-        (forecast -> LP), mirroring Skyscraper._replan."""
+        (forecast -> LP), one fused device call across all V streams."""
         sky = self.sky
-        C = sky.centers.shape[0]
-        alphas = []
-        for hist in self._labels_hist:
-            if len(hist) >= self._hist_len:
-                lab = np.asarray(hist)
-                oh = np.eye(C, dtype=np.float32)[lab]
-                h = oh.reshape(sky.n_split, sky.interval, C).mean(1)
-                r = np.asarray(forecast(sky.forecaster, jnp.asarray(h)))
-            else:
-                r = np.full(C, 1.0 / C)
-            budget = (sky.budget_override
-                      if getattr(sky, "budget_override", None)
-                      else sky.num_cores * sky.tau)
-            alphas.append(solve_lp_lagrangian(
-                jnp.asarray(sky.centers), sky.tables.cost,
-                jnp.asarray(r, jnp.float32), jnp.float32(budget)))
-        self._alpha = jnp.stack(alphas)
+        budget = (sky.budget_override
+                  if getattr(sky, "budget_override", None)
+                  else sky.num_cores * sky.tau)
+        self._alpha = _pool_replan(
+            sky.forecaster, self._bufs, jnp.asarray(sky.centers, jnp.float32),
+            sky.tables.cost, jnp.float32(budget),
+            jnp.asarray(self._seen >= self._hist_len),
+            n_split=sky.n_split, interval=sky.interval)
 
     def process(self, segments, arrival_mults: Optional[Sequence] = None):
         """One batched switch decision + per-stream Transform execution.
@@ -227,13 +250,13 @@ class SkyscraperPool:
         dummy = jnp.zeros((self.V, K), jnp.float32)
         self.state, outs = switch_step_multi(self.state, dummy, arr,
                                              self._alpha, self.tables)
+        self._bufs = _pool_shift(self._bufs, outs["c"])
         ks = np.asarray(outs["k"])
         statuses, results, q_meas = [], [], np.zeros(self.V, np.float32)
         for v, seg in enumerate(segments):
             result, q = self.sky.proc_fn(seg, self.sky.configs[int(ks[v])])
             q_meas[v] = q
             results.append(result)
-            self._labels_hist[v].append(int(np.asarray(outs["c"])[v]))
             statuses.append({"config": self.sky.configs[int(ks[v])],
                              "k": int(ks[v]),
                              "category": int(np.asarray(outs["c"])[v]),

@@ -34,6 +34,30 @@ def forecast(params, hist):
     return jax.nn.softmax(x @ params["l3"]["w"] + params["l3"]["b"], axis=-1)
 
 
+def history_histogram(label_buf, n_categories: int, *, n_split: int,
+                      interval: int):
+    """Fixed-shape histogram features from a rolling label buffer.
+
+    label_buf: (n_split * interval,) int32 — the most recent labels,
+    oldest first (zero-initialized buffers behave like the host loop's
+    left-zero padding). Returns (n_split, |C|) per-sub-interval category
+    histograms — pure jnp, so it is jit/scan-friendly and can sit inside
+    the fused whole-run engine's carry.
+    """
+    oh = jax.nn.one_hot(label_buf, n_categories, dtype=jnp.float32)
+    return oh.reshape(n_split, interval, n_categories).mean(axis=1)
+
+
+def forecast_from_labels(params, label_buf, n_categories: int, *,
+                         n_split: int, interval: int):
+    """forecast() on a fixed-shape rolling label buffer (scan-friendly:
+    every shape is static, so the fused engine carries ``label_buf``
+    through an outer ``lax.scan`` and replans entirely on device)."""
+    hist = history_histogram(label_buf, n_categories, n_split=n_split,
+                             interval=interval)
+    return forecast(params, hist)
+
+
 def _loss(params, X, Y):
     pred = forecast(params, X)
     return jnp.mean(jnp.sum((pred - Y) ** 2, axis=-1))

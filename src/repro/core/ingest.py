@@ -1,14 +1,21 @@
 """Online video ingestion (paper §4) + the paper's baselines.
 
 ``run_skyscraper``: planning windows (forecast -> LP -> α) around a
-jit-scanned switcher loop. Baselines: Static (fixed config),
-Chameleon* (periodic profiling, buffer-agnostic), VideoStorm-like
-(query-load adaptive: always the most qualitative feasible config),
-and Optimum (ground-truth knapsack — solved exactly via the same
-Lagrangian machinery with one "category" per segment).
+jit-scanned switcher loop, driven by a host Python loop (one dispatch
+per window). ``run_skyscraper_fused``: the SAME pipeline as ONE
+compiled program — an outer ``lax.scan`` over planning windows whose
+body inlines the forecaster (rolling label-histogram carry), the
+Lagrangian LP on the in-carry cloud-budget ration, and the switcher
+window scan — so a T-segment run is one dispatch instead of T/W.
+Baselines: Static (fixed config), Chameleon* (periodic profiling,
+buffer-agnostic), VideoStorm-like (query-load adaptive: always the most
+qualitative feasible config), and Optimum (ground-truth knapsack —
+solved exactly via the same Lagrangian machinery with one "category"
+per segment).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -16,12 +23,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.forecaster import forecast
+from repro.core.forecaster import forecast_from_labels
 from repro.core.offline import Fitted
-from repro.core.planner import solve_lp_lagrangian
+from repro.core.planner import (solve_lp_lagrangian, solve_lp_rationed,
+                                solve_lp_stacked)
 from repro.core.switcher import (SwitchTables, init_state, init_state_multi,
-                                 pad_window, pad_window_multi, run_window,
-                                 run_window_multi, stack_tables)
+                                 pad_window, pad_window_multi,
+                                 register_cache_probe, run_window,
+                                 run_window_multi, stack_tables, window_scan,
+                                 window_scan_multi)
 from repro.data.stream import Stream
 
 CLOUD_PREMIUM = 1.8      # App. L
@@ -53,6 +63,34 @@ class RunResult:
 def _max_quality(stream: Stream, power: np.ndarray) -> np.ndarray:
     from repro.core.knobs import quality as qfn
     return qfn(power.max(), stream.difficulty)
+
+
+def _assemble_result(cat: Dict[str, np.ndarray], qmax: np.ndarray, K: int,
+                     plans: List) -> RunResult:
+    """RunResult from a flattened trace dict — shared by the windowed
+    and fused engines so their reported fields can never drift apart."""
+    return RunResult(
+        quality_sum=float(cat["qual"].sum()),
+        quality_max_sum=float(qmax.sum()),
+        onprem_core_s=float(cat["on_s"].sum()),
+        cloud_core_s=float(cat["cl_s"].sum()),
+        buffer_peak_s=float(cat["buffer_s"].max()),
+        overflow=False,
+        k_hist=np.bincount(cat["k"], minlength=K),
+        c_trace=cat["c"], k_trace=cat["k"], buffer_trace=cat["buffer_s"],
+        plans=plans)
+
+
+def _oracle_rate(q_w, centers, valid, w_tf):
+    """Nearest-center labels over a window -> valid-masked category
+    rate. Works batched ((V, W, K) quals vs (V, C, K) centers) and
+    unbatched; sentinel padding rows never win the argmin, so padded
+    categories get rate 0. One definition keeps the single- and
+    multi-stream fused engines' forecasts in lockstep."""
+    d = ((q_w[..., :, None, :] - centers[..., None, :, :]) ** 2).sum(-1)
+    oh = jax.nn.one_hot(jnp.argmin(d, axis=-1), centers.shape[-2],
+                        dtype=jnp.float32)
+    return (oh * valid[..., None]).sum(-2) / w_tf
 
 
 def run_skyscraper(fitted: Fitted, stream: Stream, *, n_cores: int,
@@ -88,16 +126,14 @@ def run_skyscraper(fitted: Fitted, stream: Stream, *, n_cores: int,
             lab = d.argmin(1)
             r = np.bincount(lab, minlength=C) / W_t
         elif forecast_mode == "model" and labels_hist:
-            lab = np.concatenate(labels_hist)[-fitted.interval_segments
-                                              * fitted.n_split:]
             need = fitted.interval_segments * fitted.n_split
+            lab = np.concatenate(labels_hist)[-need:]
             if len(lab) < need:
                 lab = np.concatenate([np.zeros(need - len(lab), np.int64),
                                       lab])
-            oh = np.eye(C, dtype=np.float32)[lab]
-            hist = oh.reshape(fitted.n_split, fitted.interval_segments,
-                              C).mean(1)
-            r = np.asarray(forecast(fitted.forecaster, jnp.asarray(hist)))
+            r = np.asarray(forecast_from_labels(
+                fitted.forecaster, jnp.asarray(lab, jnp.int32), C,
+                n_split=fitted.n_split, interval=fitted.interval_segments))
         else:
             r = np.full(C, 1.0 / C)
         # ---- plan (budget = on-prem + rationed cloud, in core-s) --------
@@ -135,40 +171,134 @@ def run_skyscraper(fitted: Fitted, stream: Stream, *, n_cores: int,
                         fitted.forecaster, X, Y, epochs=3, seed=seed)
 
     cat = {k: np.concatenate(v) for k, v in outs_all.items()}
-    qmax = _max_quality(stream, fitted.power)
-    return RunResult(
-        quality_sum=float(cat["qual"].sum()),
-        quality_max_sum=float(qmax.sum()),
-        onprem_core_s=float(cat["on_s"].sum()),
-        cloud_core_s=float(cat["cl_s"].sum()),
-        buffer_peak_s=float(cat["buffer_s"].max()),
-        overflow=False,
-        k_hist=np.bincount(cat["k"], minlength=K),
-        c_trace=cat["c"], k_trace=cat["k"], buffer_trace=cat["buffer_s"],
-        plans=plans)
+    return _assemble_result(cat, _max_quality(stream, fitted.power), K,
+                            plans)
 
 
-def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
+@functools.partial(jax.jit, static_argnames=("mode", "n_split", "interval"))
+def _fused_run(state, buf, quals_w, arrs_w, valid_w, wts, fracs, tables,
+               centers, cost, params, core_s_per_seg, cloud_budget, *,
+               mode: str, n_split: int, interval: int):
+    """The whole online phase as ONE compiled program: an outer scan over
+    planning windows; each body = forecast -> LP -> inner window scan.
+
+    quals_w (n_w, W, K); arrs_w/valid_w (n_w, W); wts (n_w,) int32 real
+    segments per window; fracs (n_w,) the window's share of the remaining
+    run (the cloud ration). ``buf`` is the rolling label buffer feeding
+    the forecaster ("model" mode); the label bincounts that the host loop
+    kept in numpy live entirely in the carry.
+    """
+    C = centers.shape[0]
+    need = n_split * interval
+
+    def body(carry, xs):
+        st, buf, n_seen = carry
+        q_w, a_w, valid, w_t, frac = xs
+        w_tf = w_t.astype(jnp.float32)
+        # ---- forecast r (category distribution over the window) -------
+        if mode == "oracle":
+            r = _oracle_rate(q_w, centers, valid, w_tf)
+        elif mode == "model":
+            r = jnp.where(n_seen > 0,
+                          forecast_from_labels(params, buf, C,
+                                               n_split=n_split,
+                                               interval=interval),
+                          jnp.full((C,), 1.0 / C, jnp.float32))
+        else:
+            r = jnp.full((C,), 1.0 / C, jnp.float32)
+        # ---- plan: cloud ration computed from the in-carry spend ------
+        alpha = solve_lp_rationed(
+            centers, cost, r,
+            core_s_per_segment=core_s_per_seg,
+            cloud_left=cloud_budget - st["cloud_spent"],
+            frac=frac, window_len=w_tf, cloud_premium=CLOUD_PREMIUM)
+        # ---- reactive switching (the PR-1 window body, inlined) -------
+        st, outs = window_scan(st, q_w, a_w, valid, alpha, tables)
+        # ---- roll the W_t real labels into the history buffer ---------
+        # (only the forecaster reads it; mode is static, so the roll
+        # disappears from the oracle/uniform programs at trace time)
+        if mode == "model":
+            cat = jnp.concatenate([buf, outs["c"].astype(jnp.int32)])
+            buf = jax.lax.dynamic_slice(cat, (w_t,), (need,))
+        return (st, buf, n_seen + w_t), (outs, r, alpha)
+
+    (state, _, _), (outs, rs, alphas) = jax.lax.scan(
+        body, (state, buf, jnp.int32(0)),
+        (quals_w, arrs_w, valid_w, wts, fracs))
+    return state, outs, rs, alphas
+
+
+register_cache_probe("fused_single", lambda: _fused_run._cache_size())
+
+
+def fused_cache_size() -> int:
+    """jit cache entries of the fused whole-run engine (single-stream):
+    exactly 1 after warmup means the entire T-segment run re-uses one
+    executable."""
+    return _fused_run._cache_size()
+
+
+def _window_layout(T: int, W: int):
+    """Split a T-segment run into ceil(T/W) fixed-length windows: padded
+    reshape layout plus per-window real lengths and cloud rations."""
+    n_w = -(-T // W)
+    pad = n_w * W - T
+    starts = np.arange(n_w) * W
+    wts = np.minimum(W, T - starts).astype(np.int32)
+    fracs = (wts / (T - starts)).astype(np.float32)
+    return n_w, pad, wts, fracs
+
+
+def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
                          cloud_budget_core_s: float = 0.0,
                          buffer_gb: float = 4.0,
-                         plan_days: float = 0.25, seed: int = 0):
-    """Multi-stream ingestion (paper App. D, scenario 1): each stream has
-    its own cores + buffer; the cloud budget and the knob PLAN are joint —
-    one LP over all streams' categories so the shared budget flows to the
-    stream where it buys the most quality.
+                         plan_days: Optional[float] = None,
+                         forecast_mode: str = "model",
+                         seed: int = 0) -> RunResult:
+    """``run_skyscraper`` as one dispatch: same planning windows, same
+    forecasts, same LP, same switcher — fused into a single outer scan
+    (results match the windowed loop to float32 tolerance). No
+    ``online_finetune``: training inside the scan would defeat the
+    point; use the windowed loop for App. E.2 experiments."""
+    w = fitted.workload
+    tau = w.segment_seconds
+    plan_days = plan_days or fitted.horizon_segments * tau / 86400
+    W = max(1, int(plan_days * 86400 / tau))
+    tables = fitted.tables(buffer_gb=buffer_gb,
+                           cloud_budget=cloud_budget_core_s)
+    quals = jnp.asarray(stream.quality(fitted.power, seed=seed), jnp.float32)
+    arrivals = jnp.asarray(stream.arrival, jnp.float32)
+    T = stream.n_segments
+    C, K = fitted.centers.shape
+    centers = jnp.asarray(fitted.centers, jnp.float32)
+    cost = jnp.asarray(fitted.cost, jnp.float32)
+    n_w, pad, wts, fracs = _window_layout(T, W)
+    quals_w = jnp.pad(quals, ((0, pad), (0, 0))).reshape(n_w, W, K)
+    arrs_w = jnp.pad(arrivals, (0, pad),
+                     constant_values=1.0).reshape(n_w, W)
+    valid_w = (jnp.arange(n_w * W) < T).reshape(n_w, W)
+    need = fitted.interval_segments * fitted.n_split
+    state, outs, rs, alphas = _fused_run(
+        init_state(tables), jnp.zeros((need,), jnp.int32), quals_w, arrs_w,
+        valid_w, jnp.asarray(wts), jnp.asarray(fracs), tables, centers,
+        cost, fitted.forecaster if forecast_mode == "model" else None,
+        jnp.float32(n_cores * tau), jnp.float32(cloud_budget_core_s),
+        mode=forecast_mode, n_split=fitted.n_split,
+        interval=fitted.interval_segments)
+    # un-window the traces: padding only ever sits at the very end, so
+    # the flattened prefix [:T] is the run in time order
+    cat = {k: np.asarray(v).reshape((n_w * W,) + v.shape[2:])[:T]
+           for k, v in outs.items()}
+    rs, alphas = np.asarray(rs), np.asarray(alphas)
+    return _assemble_result(cat, _max_quality(stream, fitted.power), K,
+                            [(rs[i], alphas[i]) for i in range(n_w)])
 
-    Batched engine: per window, the joint LP produces a (V, C, K) alpha
-    stack and ONE fused ``lax.scan`` (``run_window_multi``) executes all
-    V streams' switch decisions — one dispatch per window instead of V,
-    and windows are padded to the fixed plan length so nothing recompiles
-    after warmup. Streams may have different category counts; shorter
-    category tables are padded with sentinel centers that never classify.
-    """
-    from repro.core.planner import solve_multi_stream
+
+def _multi_prep(fitteds, streams, *, buffer_gb, cloud_budget_core_s, seed):
+    """Shared multi-stream setup: sentinel-padded per-stream tables
+    stacked to static (V, C_max, K) shapes + stacked stream data."""
     import dataclasses as _dc
     V = len(fitteds)
-    tau = fitteds[0].workload.segment_seconds
-    W = max(1, int(plan_days * 86400 / tau))
     T = min(s.n_segments for s in streams)
     K = len(fitteds[0].configs)
     assert all(len(f.configs) == K for f in fitteds), \
@@ -185,14 +315,96 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
             pad = jnp.full((C_max - C_v, K), 1e6, jnp.float32)
             tb = _dc.replace(tb, centers=jnp.concatenate([tb.centers, pad]))
         tables.append(tb)
-    tab_stack = stack_tables(tables)
-    state = init_state_multi(tables)
     quals = jnp.stack([jnp.asarray(s.quality(f.power, seed=seed))[:T]
                        for s, f in zip(streams, fitteds)])      # (V,T,K)
     arrs = jnp.stack([jnp.asarray(s.arrival[:T], jnp.float32)
                       for s in streams])                        # (V,T)
     qmax = np.stack([np.asarray(_max_quality(s, f.power))[:T]
                      for s, f in zip(streams, fitteds)]).sum(axis=1)
+    return V, T, K, Cs, C_max, tables, quals, arrs, qmax
+
+
+@jax.jit
+def _fused_run_multi(state, quals_w, arrs_w, valid_w, wts, tables,
+                     cost, core_s_total, cloud_ration):
+    """Whole multi-stream run as one program: outer scan over windows;
+    each body = per-stream oracle forecast -> joint stacked LP -> the
+    batched V-stream window scan. quals_w (n_w, V, W, K); arrs_w/valid_w
+    (n_w, V, W); wts (n_w,) int32. Returns final state + per-window
+    per-stream quality sums (n_w, V)."""
+    centers = tables.centers                              # (V, C_max, K)
+
+    def body(st, xs):
+        q_w, a_w, valid, w_t = xs
+        # per-stream oracle r over the window (App. D Eq. 7-9)
+        r = _oracle_rate(q_w, centers, valid, w_t.astype(jnp.float32))
+        # the LP's spend constraint is PER SEGMENT: on-prem capacity plus
+        # the evenly-rationed premium-discounted cloud budget
+        alpha = solve_lp_stacked(centers, cost, r,
+                                 core_s_total + cloud_ration)
+        st, outs = window_scan_multi(st, q_w, a_w, valid, alpha, tables)
+        return st, outs["qual"].sum(axis=1)               # padding zeroed
+
+    return jax.lax.scan(body, state, (quals_w, arrs_w, valid_w, wts))
+
+
+register_cache_probe("fused_multi", lambda: _fused_run_multi._cache_size())
+
+
+def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
+                         cloud_budget_core_s: float = 0.0,
+                         buffer_gb: float = 4.0,
+                         plan_days: float = 0.25, seed: int = 0):
+    """Multi-stream ingestion (paper App. D, scenario 1): each stream has
+    its own cores + buffer; the cloud budget and the knob PLAN are joint —
+    one LP over all streams' categories so the shared budget flows to the
+    stream where it buys the most quality.
+
+    Fused engine: the ENTIRE run is one compiled program — an outer scan
+    over planning windows whose body computes every stream's forecast,
+    solves the joint LP on device (``solve_lp_stacked`` over the static
+    sentinel-padded (V, C_max, K) category stack), and executes the
+    batched V-stream switcher window. Zero host planning work per
+    window; one dispatch per run instead of T/W.
+    """
+    tau = fitteds[0].workload.segment_seconds
+    W = max(1, int(plan_days * 86400 / tau))
+    V, T, K, _, _, tables, quals, arrs, qmax = _multi_prep(
+        fitteds, streams, buffer_gb=buffer_gb,
+        cloud_budget_core_s=cloud_budget_core_s, seed=seed)
+    n_w, pad, wts, _ = _window_layout(T, W)
+    quals_w = jnp.pad(quals, ((0, 0), (0, pad), (0, 0))) \
+        .reshape(V, n_w, W, K).transpose(1, 0, 2, 3)      # (n_w, V, W, K)
+    arrs_w = jnp.pad(arrs, ((0, 0), (0, pad)), constant_values=1.0) \
+        .reshape(V, n_w, W).transpose(1, 0, 2)            # (n_w, V, W)
+    valid_w = jnp.broadcast_to((jnp.arange(n_w * W) < T).reshape(n_w, 1, W),
+                               (n_w, V, W))
+    _, q_sums = _fused_run_multi(
+        init_state_multi(tables), quals_w, arrs_w, valid_w,
+        jnp.asarray(wts), stack_tables(tables),
+        jnp.asarray(fitteds[0].cost, jnp.float32),
+        jnp.float32(V * n_cores_each * tau),
+        jnp.float32(cloud_budget_core_s / (CLOUD_PREMIUM * max(T, 1))))
+    sums = np.asarray(q_sums).sum(axis=0)
+    return {"quality_pct": 100.0 * sums.sum() / max(qmax.sum(), 1e-9),
+            "per_stream_pct": (100.0 * sums / np.maximum(qmax, 1e-9)).tolist()}
+
+
+def run_skyscraper_multi_windowed(fitteds, streams, *, n_cores_each: int,
+                                  cloud_budget_core_s: float = 0.0,
+                                  buffer_gb: float = 4.0,
+                                  plan_days: float = 0.25, seed: int = 0):
+    """The PR-1 windowed host loop (one batched window scan dispatch per
+    window, host-side forecast + LP between windows) — kept as the
+    reference/baseline the fused engine is benchmarked against."""
+    from repro.core.planner import solve_multi_stream
+    tau = fitteds[0].workload.segment_seconds
+    W = max(1, int(plan_days * 86400 / tau))
+    V, T, K, Cs, C_max, tables, quals, arrs, qmax = _multi_prep(
+        fitteds, streams, buffer_gb=buffer_gb,
+        cloud_budget_core_s=cloud_budget_core_s, seed=seed)
+    tab_stack = stack_tables(tables)
+    state = init_state_multi(tables)
     sums = np.zeros(V)
     t = 0
     while t < T:
@@ -205,8 +417,10 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
             lab = d.argmin(1)
             rs.append(np.bincount(lab, minlength=Cs[v]) / W_t)
             qs.append(fitteds[v].centers)
-        budget = V * n_cores_each * tau + (cloud_budget_core_s / CLOUD_PREMIUM
-                                           * W_t / T)
+        # the LP's spend constraint is per segment: on-prem capacity plus
+        # the evenly-rationed premium-discounted cloud budget
+        budget = V * n_cores_each * tau + (cloud_budget_core_s
+                                           / (CLOUD_PREMIUM * T))
         alphas = solve_multi_stream(qs, fitteds[0].cost, rs, budget)
         a_stack = np.zeros((V, C_max, K), np.float32)
         for v, a in enumerate(alphas):

@@ -102,6 +102,37 @@ def solve_lp_lagrangian(qual, cost, r, budget, iters: int = 64):
     return jnp.where(s0 <= budget, a0, a_mix)
 
 
+def solve_lp_rationed(qual, cost, r, *, core_s_per_segment, cloud_left,
+                      frac, window_len, cloud_premium):
+    """Window-rationed LP entry point (paper §4 online loop): the
+    per-window budget is the on-prem capacity plus the REMAINING cloud
+    budget rationed proportionally to the window's share of the rest of
+    the run, discounted by the cloud premium. Pure jnp on scalars, so it
+    inlines into the fused whole-run scan (``cloud_left`` comes from the
+    switcher state carry). Returns the (C, K) plan."""
+    w_t = jnp.asarray(window_len, jnp.float32)
+    budget = (jnp.asarray(core_s_per_segment, jnp.float32) * w_t
+              + jnp.maximum(jnp.asarray(cloud_left, jnp.float32), 0.0)
+              * jnp.asarray(frac, jnp.float32) / cloud_premium)
+    return solve_lp_lagrangian(qual, cost, r, budget / w_t)
+
+
+def solve_lp_stacked(qual, cost, r, budget):
+    """Batched multi-stream LP on STATIC shapes: qual (V, C_max, K)
+    sentinel-padded category tables, r (V, C_max) forecasts with zero
+    rate on padding rows, one shared ``budget``. The joint LP is the
+    same product-of-simplices + single-budget structure, so flattening
+    the stream axis into the category axis and calling the Lagrangian
+    solver once is exact; zero-rate rows contribute nothing to spend or
+    value, so the padding cannot perturb the optimum. jit/scan-friendly
+    device-side replacement for ``solve_multi_stream``'s host loop.
+    Returns alpha (V, C_max, K)."""
+    V, C, K = qual.shape
+    alpha = solve_lp_lagrangian(qual.reshape(V * C, K), cost,
+                                r.reshape(V * C), budget)
+    return alpha.reshape(V, C, K)
+
+
 def plan_value(alpha, qual, cost, r):
     """Returns (expected quality, expected spend) of a plan."""
     q = float(jnp.sum(r[:, None] * alpha * qual))

@@ -187,13 +187,20 @@ def switch_step_multi(state, qual_rows, arrivals, alpha,
     return _switch_multi_jit(state, qual_rows, arrivals, alpha, tables)
 
 
-@jax.jit
-def _run_window(state, quals, arrivals, valid, alpha, tables):
+def window_scan(state, quals, arrivals, valid, alpha, tables):
+    """Pure (un-jitted) window body: the masked-switch ``lax.scan`` over
+    one planning window. Reusable INSIDE an outer scan — the fused
+    whole-run engine (``ingest.run_skyscraper_fused``) inlines this as
+    its per-window step, so forecast→plan→switch lowers to one program.
+    """
     def body(st, inp):
         q_row, arr, v = inp
         return _masked_switch(st, q_row, arr, v, alpha, tables)
 
     return jax.lax.scan(body, state, (quals, arrivals, valid))
+
+
+_run_window = jax.jit(window_scan)
 
 
 def run_window(state, quals, arrivals, alpha, tables: SwitchTables,
@@ -235,11 +242,12 @@ def pad_window_multi(quals, arrivals, W: int):
     return quals, arrivals, valid
 
 
-@jax.jit
-def _run_window_multi(state, quals, arrivals, valid, alpha, tables):
-    # vmap the decision over the leading stream axis of EVERY pytree —
-    # batched state {used:(V,C,K), buffer_s:(V,), ...}, (V,C,K) alpha
-    # stack, and stacked tables — then scan once over time.
+def window_scan_multi(state, quals, arrivals, valid, alpha, tables):
+    """Pure (un-jitted) batched window body — reusable inside an outer
+    scan (the fused multi-stream engine). vmaps the decision over the
+    leading stream axis of EVERY pytree — batched state {used:(V,C,K),
+    buffer_s:(V,), ...}, (V,C,K) alpha stack, and stacked tables — then
+    scans once over time."""
     vstep = jax.vmap(_masked_switch)
 
     def body(st, inp):
@@ -252,6 +260,9 @@ def _run_window_multi(state, quals, arrivals, valid, alpha, tables):
     state, outs = jax.lax.scan(body, state, xs)
     outs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), outs)  # (V,T,...)
     return state, outs
+
+
+_run_window_multi = jax.jit(window_scan_multi)
 
 
 def run_window_multi(state, quals, arrivals, alpha,
@@ -274,3 +285,25 @@ def compile_cache_size() -> Tuple[int, int]:
     """(single-window, multi-window) jit cache entries — lets tests and
     benchmarks assert zero recompiles after warmup."""
     return _run_window._cache_size(), _run_window_multi._cache_size()
+
+
+# Engine modules (fused ingest, serving pool) register their jitted
+# entry points here so one probe covers every compiled program that
+# could silently retrace.
+_CACHE_PROBES = {
+    "run_window": lambda: _run_window._cache_size(),
+    "run_window_multi": lambda: _run_window_multi._cache_size(),
+    "switch_step": lambda: _switch_jit._cache_size(),
+    "switch_step_multi": lambda: _switch_multi_jit._cache_size(),
+}
+
+
+def register_cache_probe(name: str, probe) -> None:
+    _CACHE_PROBES[name] = probe
+
+
+def compile_cache_sizes() -> Dict[str, int]:
+    """Per-engine jit cache entry counts (a superset of
+    ``compile_cache_size``): stable values across ticks/windows prove
+    zero recompiles after warmup."""
+    return {name: int(probe()) for name, probe in _CACHE_PROBES.items()}

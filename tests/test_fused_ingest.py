@@ -1,0 +1,171 @@
+"""Fused whole-run ingestion engine: the single-dispatch outer scan
+(forecast -> LP -> switch, ``run_skyscraper_fused``) must reproduce the
+windowed host loop for every forecast mode — including a padded tail
+window — and the serving pool's device-side planning must never
+recompile after warmup."""
+import numpy as np
+import pytest
+
+from repro.configs.workloads import COVID
+from repro.core import ingest as IG
+from repro.core.offline import fit
+from repro.core.switcher import compile_cache_size, compile_cache_sizes
+from repro.data.stream import generate
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    return fit(COVID, n_cores=8, days_unlabeled=2.0, n_categories=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    # T = 4752 segments; with plan_days=0.02 -> W = 864, so the run is
+    # 5 full windows + a 432-segment tail (T not divisible by W)
+    return generate(COVID, days=0.11, seed=42)
+
+
+RUN_KW = dict(n_cores=8, cloud_budget_core_s=3_000.0, plan_days=0.02)
+
+
+@pytest.mark.parametrize("mode", ["oracle", "model", "uniform"])
+def test_fused_matches_windowed(fitted, stream, mode):
+    W = max(1, int(RUN_KW["plan_days"] * 86400
+                   / fitted.workload.segment_seconds))
+    assert stream.n_segments % W != 0, "test must cover a padded tail"
+    ref = IG.run_skyscraper(fitted, stream, forecast_mode=mode, **RUN_KW)
+    got = IG.run_skyscraper_fused(fitted, stream, forecast_mode=mode,
+                                  **RUN_KW)
+    # float32 tolerance on every accumulated quantity; the discrete
+    # decision traces are identical in practice but the windowed loop
+    # forecasts in float64 numpy while the fused engine is float32
+    # on-device, so a 1-ulp rounding difference may legitimately flip an
+    # argmax tie on some platforms — allow 0.1% of decisions to differ
+    rtol = 5e-4
+    T = stream.n_segments
+    assert got.quality_sum == pytest.approx(ref.quality_sum, rel=rtol)
+    assert got.onprem_core_s == pytest.approx(ref.onprem_core_s, rel=rtol)
+    assert got.cloud_core_s == pytest.approx(ref.cloud_core_s,
+                                             rel=rtol, abs=1.0)
+    assert got.buffer_peak_s == pytest.approx(ref.buffer_peak_s, rel=rtol,
+                                              abs=1.0)
+    assert got.quality_max_sum == pytest.approx(ref.quality_max_sum)
+    allow = max(3, int(0.001 * T))
+    assert int(np.abs(got.k_hist - ref.k_hist).sum()) <= 2 * allow
+    assert int((got.c_trace != ref.c_trace).sum()) <= allow
+    assert int((got.k_trace != ref.k_trace).sum()) <= allow
+    assert len(got.plans) == len(ref.plans)
+    for (r_f, a_f), (r_w, a_w) in zip(got.plans, ref.plans):
+        np.testing.assert_allclose(r_f, r_w, atol=1e-5)
+        # alpha rows can differ wholesale at an LP vertex tie; require
+        # near-universal agreement instead of bit equality
+        assert (np.abs(a_f - a_w) <= 1e-4).mean() >= 0.99
+
+
+def test_fused_cloud_path_matches_windowed(fitted, stream):
+    """A tiny buffer forces cloud placements: the in-carry cloud-budget
+    ration must track the host loop's bookkeeping."""
+    kw = dict(n_cores=8, cloud_budget_core_s=5_000.0, buffer_gb=0.05,
+              plan_days=0.02, forecast_mode="oracle")
+    ref = IG.run_skyscraper(fitted, stream, **kw)
+    got = IG.run_skyscraper_fused(fitted, stream, **kw)
+    assert ref.cloud_core_s > 0.0, "setup must exercise the cloud path"
+    assert got.cloud_core_s == pytest.approx(ref.cloud_core_s, rel=5e-4,
+                                             abs=1.0)
+    assert got.quality_sum == pytest.approx(ref.quality_sum, rel=5e-4)
+    assert got.cloud_core_s <= 5_000.0 + 1e-3
+
+
+def test_fused_single_dispatch_compiles_once(fitted, stream):
+    """Re-running the fused engine with the same shapes/mode must not
+    add jit cache entries — the whole run stays one executable."""
+    IG.run_skyscraper_fused(fitted, stream, forecast_mode="oracle",
+                            **RUN_KW)                       # warmup
+    n0 = IG.fused_cache_size()
+    IG.run_skyscraper_fused(fitted, stream, forecast_mode="oracle",
+                            **RUN_KW)
+    IG.run_skyscraper_fused(fitted, stream, forecast_mode="oracle",
+                            n_cores=8, cloud_budget_core_s=9_999.0,
+                            plan_days=0.02)                 # budget is traced
+    assert IG.fused_cache_size() == n0
+
+
+def test_fused_multi_matches_windowed_multi(fitted):
+    """The fused multi-stream engine agrees with the windowed host loop
+    (same joint LP optimum; vertex ties may differ, so compare the
+    realized quality, not bit-level traces)."""
+    s1 = generate(COVID, days=0.1, seed=5)
+    s2 = generate(COVID, days=0.1, seed=17)
+    kw = dict(n_cores_each=8, cloud_budget_core_s=2_000.0)
+    got = IG.run_skyscraper_multi([fitted, fitted], [s1, s2], **kw)
+    ref = IG.run_skyscraper_multi_windowed([fitted, fitted], [s1, s2], **kw)
+    assert got["quality_pct"] == pytest.approx(ref["quality_pct"], abs=0.1)
+    np.testing.assert_allclose(got["per_stream_pct"],
+                               ref["per_stream_pct"], atol=0.1)
+
+
+def _make_pool(V=3, plan_segments=12):
+    from repro.core.api import Skyscraper, SkyscraperPool
+    rng = np.random.default_rng(0)
+    mat = rng.normal(0, 1, (64, 64)).astype(np.float32)
+    segments = [{"d": float(d)} for d in np.linspace(0.0, 1.0, 40)]
+
+    def proc(seg, knobs):
+        n = knobs["samples"]
+        acc = mat
+        for _ in range(4 * n):              # cost grows with the knob
+            acc = acc @ mat
+        return seg["d"], 1.0 - seg["d"] * (1.0 - 0.8 * n / 4.0)
+
+    sky = Skyscraper(segment_seconds=1.0, n_categories=3)
+    sky.set_resources(num_cores=1, buffer_gb=0.1)
+    sky.register_knob("samples", [1, 2, 4])
+    sky.fit(segments, proc, plan_segments=plan_segments, profile_repeats=3)
+    if len(sky.configs) > 1:
+        # budget strictly inside the cost range -> the planner must mix,
+        # so plans respond to the forecasted content distribution
+        sky.set_budget(0.5 * (float(sky.cost.min()) + float(sky.cost.max())))
+    return SkyscraperPool(sky, n_streams=V), segments, rng
+
+
+def test_pool_fused_zero_recompiles_across_windows():
+    """SkyscraperPool on the fused engine: ticking V streams through 3+
+    planning windows (including replans after the label buffers fill, so
+    the uniform->model flip is covered) must keep every jit cache
+    stable after the first window's warmup."""
+    pool, segments, rng = _make_pool(V=3, plan_segments=12)
+    plan_every = pool.sky._plan_every
+
+    def tick():
+        segs = [segments[rng.integers(len(segments))]
+                for _ in range(pool.V)]
+        statuses, _ = pool.process(segs)
+        return statuses
+
+    for _ in range(plan_every + 1):        # warmup: step+shift+replan
+        tick()
+    sizes0 = compile_cache_sizes()
+    tuple0 = compile_cache_size()
+    for _ in range(3 * plan_every + 2):    # 3+ more planning windows
+        statuses = tick()
+    assert compile_cache_sizes() == sizes0, (compile_cache_sizes(), sizes0)
+    assert compile_cache_size() == tuple0
+    assert len(statuses) == pool.V
+    assert all(np.isfinite(s["quality"]) for s in statuses)
+
+
+def test_pool_fused_plans_adapt_to_history():
+    """After the rolling label buffers fill, the device-side replan must
+    switch from the uniform prior to the forecaster (plans change)."""
+    import jax.numpy as jnp
+    pool, segments, rng = _make_pool(V=2, plan_segments=8)
+    assert len(pool.sky.configs) > 1, "fixture must keep >1 Pareto config"
+    a0 = np.asarray(pool._alpha)
+    # feed hard content only -> histories skew -> forecast != uniform
+    for _ in range(max(pool._hist_len, pool.sky._plan_every) * 2):
+        pool.process([segments[-1]] * pool.V)
+    assert pool._seen >= pool._hist_len
+    assert int(jnp.sum(pool._bufs >= 0)) == pool._bufs.size
+    a1 = np.asarray(pool._alpha)
+    assert a0.shape == a1.shape
+    assert np.abs(a1 - a0).max() > 1e-6, "replan never left the prior"

@@ -1,0 +1,88 @@
+"""Placement machinery edge cases: tied Pareto points, empty task
+lists, and the greedy fallback for DAGs too big to enumerate must all
+return a valid (runtime, cloud-cost) frontier."""
+import numpy as np
+
+from repro.core.placement import (Task, enumerate_placements, pareto_filter,
+                                  simulate)
+
+
+def _is_valid_frontier(points):
+    """No kept point may dominate another kept point (<= in both dims,
+    < in at least one)."""
+    for i, (rt_i, cl_i) in enumerate(points):
+        for j, (rt_j, cl_j) in enumerate(points):
+            if i == j:
+                continue
+            if rt_i <= rt_j and cl_i <= cl_j and (rt_i < rt_j or cl_i < cl_j):
+                return False
+    return True
+
+
+def test_pareto_filter_tied_points_keep_one():
+    """Exactly tied (runtime, cost) points collapse to one frontier
+    entry; the result is still a valid frontier covering every input."""
+    pts = [(1.0, 2.0, 0), (1.0, 2.0, 1), (2.0, 1.0, 2), (2.0, 1.0, 3),
+           (3.0, 1.0, 4)]                  # 4 dominated by 2, ties 0/1, 2/3
+    keep = pareto_filter(pts)
+    assert keep == [0, 2]
+    kept = [(pts_rt, pts_cl) for pts_rt, pts_cl, i in pts if i in keep]
+    assert _is_valid_frontier(kept)
+    # every input point is matched-or-dominated by some kept point
+    for rt, cl, _ in pts:
+        assert any(k_rt <= rt and k_cl <= cl for k_rt, k_cl in kept)
+
+
+def test_pareto_filter_all_identical():
+    pts = [(5.0, 5.0, i) for i in range(4)]
+    keep = pareto_filter(pts)
+    assert keep == [0]
+
+
+def test_enumerate_placements_empty_task_list():
+    """No tasks: one trivial all-on-prem placement with zero cost."""
+    out = enumerate_placements([], n_cores=4)
+    assert len(out) == 1
+    mask, rt, on_s, cl_s = out[0]
+    assert mask == () and rt == 0.0 and on_s == 0.0 and cl_s == 0.0
+
+
+def test_simulate_empty_task_list():
+    rt, on_s, cl_s = simulate([], [], n_cores=2)
+    assert rt == 0.0 and on_s == 0.0 and cl_s == 0.0
+
+
+def _chain(n):
+    """n-task chain with varied durations/sizes."""
+    return [Task(f"t{i}", (i - 1,) if i else (), 10.0 + 3.0 * (i % 5),
+                 4.0 + 2.0 * (i % 3), 0.5 + 0.1 * i, 0.2)
+            for i in range(n)]
+
+
+def test_enumerate_placements_greedy_fallback_valid_frontier():
+    """DAGs above the exhaustive limit (>14 tasks) take the greedy
+    fallback, which must still return a frontier: sorted by cloud cost,
+    mutually non-dominating, and containing the zero-cloud placement the
+    throughput guarantee relies on."""
+    tasks = _chain(16)
+    out = enumerate_placements(tasks, n_cores=4)
+    assert len(out) >= 1
+    cls = [cl for _, _, _, cl in out]
+    assert cls == sorted(cls)
+    assert cls[0] == 0.0                    # all-on-prem endpoint kept
+    assert _is_valid_frontier([(rt, cl) for _, rt, _, cl in out])
+    # masks must be real placements for THIS dag
+    for mask, rt, on_s, cl_s in out:
+        assert len(mask) == len(tasks)
+        rt2, on2, cl2 = simulate(tasks, mask, 4)
+        assert (rt2, on2, cl2) == (rt, on_s, cl_s)
+
+
+def test_enumerate_placements_exhaustive_matches_greedy_endpoints():
+    """At <=14 tasks the exhaustive frontier contains the all-on-prem
+    placement and is valid."""
+    tasks = _chain(6)
+    out = enumerate_placements(tasks, n_cores=4)
+    masks = [m for m, *_ in out]
+    assert tuple(False for _ in tasks) in masks
+    assert _is_valid_frontier([(rt, cl) for _, rt, _, cl in out])

@@ -41,6 +41,60 @@ def test_lagrangian_matches_scipy(inst):
     assert (a >= -1e-6).all()
 
 
+@st.composite
+def lp_corner_instance(draw):
+    """Random instances biased onto the solver's corners: K=1 (nothing
+    to plan), single-category C=1, and infeasible budgets (below the
+    cheapest plan's spend)."""
+    C = draw(st.integers(1, 8))
+    K = draw(st.integers(1, 10))
+    kind = draw(st.sampled_from(["feasible", "infeasible", "tight"]))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    qual = rng.random((C, K)).astype(np.float32)
+    cost = np.sort(rng.random(K) * 10 + 0.1).astype(np.float32)
+    r = rng.random(C).astype(np.float32) + 0.01
+    r /= r.sum()
+    if kind == "infeasible":
+        budget = float(cost.min()) * float(rng.random() * 0.9)
+    elif kind == "tight":
+        # strictly between the cheapest and the unconstrained spend
+        budget = float(cost.min()) + float(rng.random()) \
+            * (float(cost.max()) - float(cost.min()))
+    else:
+        budget = float(cost.max()) * (1.0 + float(rng.random()))
+    return qual, cost, r, budget, kind
+
+
+@settings(max_examples=80, deadline=None)
+@given(lp_corner_instance())
+def test_lagrangian_matches_scipy_value_with_corners(inst):
+    """Plan value parity within 1e-4 across random (C, K, r, budget)
+    instances including infeasible budgets and the K=1 degenerate case
+    (the satellite property for the fused engine's on-device planner)."""
+    qual, cost, r, budget, kind = inst
+    a_ref = solve_lp_scipy(qual, cost, r, budget)
+    a = np.asarray(solve_lp_lagrangian(jnp.asarray(qual), jnp.asarray(cost),
+                                       jnp.asarray(r), budget))
+    q_ref, s_ref = plan_value(jnp.asarray(a_ref), jnp.asarray(qual),
+                              jnp.asarray(cost), jnp.asarray(r))
+    q, s = plan_value(jnp.asarray(a), jnp.asarray(qual), jnp.asarray(cost),
+                      jnp.asarray(r))
+    # rows are distributions
+    np.testing.assert_allclose(a.sum(1), 1.0, atol=1e-4)
+    assert (a >= -1e-6).all()
+    if kind == "infeasible":
+        # LP infeasible: scipy falls back to all-cheapest; the Lagrangian
+        # min-spend endpoint is the same plan -> identical value
+        assert abs(q - q_ref) <= 1e-4, (q, q_ref, kind)
+        assert abs(s - s_ref) <= 1e-3, (s, s_ref, kind)
+    else:
+        # optimal value parity + budget feasibility
+        assert abs(q - q_ref) <= 1e-4, (q, q_ref, kind)
+        assert s <= budget + 1e-3, (s, budget, kind)
+    if qual.shape[1] == 1:                 # K=1: only one possible plan
+        np.testing.assert_allclose(a, 1.0, atol=1e-6)
+
+
 def test_affordable_budget_picks_best():
     qual = np.array([[0.2, 0.9], [0.4, 0.8]], np.float32)
     cost = np.array([1.0, 2.0], np.float32)
