@@ -8,9 +8,20 @@ import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
+# every emit() lands here so runners can serialize a perf snapshot
+# (benchmarks/run.py --json) without re-parsing stdout
+_RECORDS = []
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.2f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": float(us_per_call),
+                     "derived": derived})
+
+
+def records():
+    """All rows emitted so far (list of dicts, insertion order)."""
+    return list(_RECORDS)
 
 
 @functools.lru_cache(maxsize=None)

@@ -60,16 +60,23 @@ def _bench_one(fitted, stream, W, mode, verbose):
     kw = dict(n_cores=N_CORES, cloud_budget_core_s=5_000.0,
               plan_days=(W + 0.5) * tau / 86400, forecast_mode=mode)
 
+    # best-of-3 on both sides: single-shot timings flake badly on
+    # shared/throttled CPUs, and a perf floor should compare the
+    # engines, not the noisy-neighbor schedule
     IG.run_skyscraper(fitted, stream, **kw)               # warmup
-    t0 = time.perf_counter()
-    ref = IG.run_skyscraper(fitted, stream, **kw)
-    dt_loop = time.perf_counter() - t0
+    dt_loop = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        ref = IG.run_skyscraper(fitted, stream, **kw)
+        dt_loop = min(dt_loop, time.perf_counter() - t0)
 
     IG.run_skyscraper_fused(fitted, stream, **kw)         # warmup
     cache = IG.fused_cache_size()
-    t0 = time.perf_counter()
-    got = IG.run_skyscraper_fused(fitted, stream, **kw)
-    dt_fused = time.perf_counter() - t0
+    dt_fused = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        got = IG.run_skyscraper_fused(fitted, stream, **kw)
+        dt_fused = min(dt_fused, time.perf_counter() - t0)
     recompiles = IG.fused_cache_size() - cache
 
     assert abs(got.quality_sum - ref.quality_sum) \

@@ -8,9 +8,15 @@ stream axis, and runs ONE scan — so per-window dispatch cost is constant
 in V and padded tails never recompile. Reports per-V wall-clock,
 throughput (segment-decisions/s), speedup over the loop, and the jit
 cache deltas proving zero recompiles after warmup.
+
+    PYTHONPATH=src:. python benchmarks/multi_stream_bench.py [--tiny]
+
+``--tiny`` runs a seconds-scale smoke configuration (used by
+``scripts/tier1.sh --bench-smoke`` so this entry point cannot rot).
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -28,18 +34,18 @@ W = 512               # segments per window
 TAIL = 197            # length of the final (padded) window
 
 
-def _stream_data(V, K, C, seed=0):
+def _stream_data(V, K, C, W, windows, tail, seed=0):
     rng = np.random.default_rng(seed)
     tables = [_tables(K, C, seed=v) for v in range(V)]
     alphas = rng.random((V, C, K)).astype(np.float32)
     alphas /= alphas.sum(-1, keepdims=True)
-    T = (WINDOWS - 1) * W + TAIL
+    T = (windows - 1) * W + tail
     quals = jnp.asarray(rng.random((V, T, K)), jnp.float32)
     arrs = jnp.asarray(0.5 + rng.random((V, T)), jnp.float32)
     return tables, jnp.asarray(alphas), quals, arrs, T
 
 
-def _run_loop(tables, alphas, quals, arrs, T):
+def _run_loop(tables, alphas, quals, arrs, T, W):
     """The seed implementation: V per-stream scans per window, tail
     window traced at its own (shorter) length — V dispatches/window plus
     one recompile for the tail shape, per stream."""
@@ -57,7 +63,7 @@ def _run_loop(tables, alphas, quals, arrs, T):
     return total
 
 
-def _run_batched(tab_stack, states, alphas, quals, arrs, T):
+def _run_batched(tab_stack, states, alphas, quals, arrs, T, W):
     """The batched engine: one fused scan per window, tail padded to W."""
     total = 0.0
     t = 0
@@ -72,26 +78,28 @@ def _run_batched(tab_stack, states, alphas, quals, arrs, T):
     return total
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, tiny: bool = False):
     rows = []
     K, C = 8, 4
-    for V in (1, 2, 4, 8):
-        tables, alphas, quals, arrs, T = _stream_data(V, K, C, seed=V)
+    W_, windows, tail = (64, 3, 23) if tiny else (W, WINDOWS, TAIL)
+    for V in ((1, 4) if tiny else (1, 2, 4, 8)):
+        tables, alphas, quals, arrs, T = _stream_data(V, K, C, W_, windows,
+                                                      tail, seed=V)
         tab_stack = stack_tables(tables)
 
         # ---- seed loop ------------------------------------------------
-        _run_loop(tables, alphas, quals, arrs, T)          # warmup
+        _run_loop(tables, alphas, quals, arrs, T, W_)      # warmup
         t0 = time.perf_counter()
-        q_loop = _run_loop(tables, alphas, quals, arrs, T)
+        q_loop = _run_loop(tables, alphas, quals, arrs, T, W_)
         dt_loop = time.perf_counter() - t0
 
         # ---- batched engine -------------------------------------------
         _run_batched(tab_stack, init_state_multi(tables), alphas, quals,
-                     arrs, T)                              # warmup
+                     arrs, T, W_)                          # warmup
         _, multi0 = compile_cache_size()
         t0 = time.perf_counter()
         q_bat = _run_batched(tab_stack, init_state_multi(tables), alphas,
-                             quals, arrs, T)
+                             quals, arrs, T, W_)
         dt_bat = time.perf_counter() - t0
         _, multi1 = compile_cache_size()
         recompiles = multi1 - multi0
@@ -113,4 +121,4 @@ def run(verbose: bool = True):
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    run()
+    run(tiny="--tiny" in sys.argv[1:])

@@ -1,21 +1,64 @@
 """Run every paper-table/figure benchmark. Prints ``name,us_per_call,
-derived`` CSV rows (one module per paper artifact — see DESIGN.md §6)."""
+derived`` CSV rows (one module per paper artifact — see DESIGN.md §6).
+
+    PYTHONPATH=src:. python benchmarks/run.py [only] [--json OUT]
+
+``only`` filters modules by substring. ``--json OUT`` additionally
+writes a perf snapshot (bench name -> metric dict, with the numeric
+fields of each row's ``derived`` string parsed out) so the repo's bench
+trajectory can be tracked across PRs, e.g.::
+
+    python benchmarks/run.py --json BENCH_PR3.json
+"""
 from __future__ import annotations
 
+import json
+import re
 import sys
 import traceback
 
+_NUM = re.compile(r"-?\d+(?:\.\d+)?(?:[eE]-?\d+)?")
+
+
+def _metric_dict(row) -> dict:
+    """Row -> metric dict: the leading number of every ``k=v`` part of
+    the derived string (``speedup=12.3x`` -> ``{"speedup": 12.3}``);
+    non-numeric parts keep their raw string."""
+    out = {"us_per_call": row["us_per_call"]}
+    for part in row["derived"].split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        m = _NUM.match(val.strip())
+        out[key.strip()] = float(m.group(0)) if m else val
+    return out
+
 
 def main() -> None:
-    from benchmarks import (ablation, cost_quality, design_alternatives,
-                            forecaster_bench, fused_ingest_bench,
-                            kernels_bench, multi_stream_bench, offline_phase,
-                            overheads, roofline, switcher_accuracy)
+    from benchmarks import (ablation, common, cost_quality,
+                            design_alternatives, forecaster_bench,
+                            fused_ingest_bench, kernels_bench,
+                            multi_stream_bench, offline_phase, overheads,
+                            roofline, switcher_accuracy, warehouse_bench)
+    args = list(sys.argv[1:])
+    json_out = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            sys.exit("usage: run.py [only] [--json OUT] — missing OUT path")
+        json_out = args[i + 1]
+        del args[i:i + 2]
+    only = args[0] if args else None
+
     print("name,us_per_call,derived")
+    # the engine benches with hard perf-floor asserts run first, while
+    # a fresh process (and any host CPU-quota burst budget) gives the
+    # least noisy timings
     modules = [
-        ("overheads(Fig13)", overheads),
         ("fused_ingest", fused_ingest_bench),
+        ("warehouse(Load)", warehouse_bench),
         ("multi_stream(AppD)", multi_stream_bench),
+        ("overheads(Fig13)", overheads),
         ("offline_phase(Table3)", offline_phase),
         ("kernels", kernels_bench),
         ("roofline(g)", roofline),
@@ -25,7 +68,7 @@ def main() -> None:
         ("ablation(Figs6-13)", ablation),
         ("cost_quality(Fig4/T2)", cost_quality),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    errors = {}
     for name, mod in modules:
         if only and only not in name:
             continue
@@ -33,7 +76,17 @@ def main() -> None:
             mod.run(verbose=True)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{str(e)[:120]}")
+            errors[name] = str(e)
             traceback.print_exc(file=sys.stderr)
+    if json_out:
+        snap = {row["name"]: _metric_dict(row) for row in common.records()}
+        for name, err in errors.items():
+            snap[f"{name}/ERROR"] = {"error": err}
+        with open(json_out, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(snap)} bench records to {json_out}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

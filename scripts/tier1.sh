@@ -3,9 +3,9 @@
 #
 #   scripts/tier1.sh [--bench-smoke] [extra pytest args...]
 #
-# --bench-smoke additionally runs the fused-ingest benchmark in its
-# --tiny configuration after the tests, so the benchmark entry point
-# cannot silently rot.
+# --bench-smoke additionally runs the fused-ingest, warehouse, and
+# multi-stream benchmarks in their --tiny configurations after the
+# tests, so none of the benchmark entry points can silently rot.
 #
 # Honors an existing XLA_FLAGS; otherwise forces a single host device so
 # smoke tests see a deterministic topology (the sharding tests fork their
@@ -29,7 +29,9 @@ done
 python -m pytest -x -q "${args[@]+"${args[@]}"}"
 
 if [[ "$BENCH_SMOKE" == "1" ]]; then
-  echo "== bench smoke: fused_ingest_bench --tiny =="
-  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/fused_ingest_bench.py --tiny
+  for bench in fused_ingest_bench warehouse_bench multi_stream_bench; do
+    echo "== bench smoke: ${bench} --tiny =="
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+      python "benchmarks/${bench}.py" --tiny
+  done
 fi

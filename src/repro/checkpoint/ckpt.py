@@ -34,6 +34,11 @@ _MAGIC = b"RSK1"
 _CODEC_ZSTD = b"z"
 _CODEC_ZLIB = b"d"
 _ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"   # legacy untagged files
+# reserved payload key holding plain-python (msgpack-able) metadata —
+# host-side structure like row counts or chunk sizes that must survive
+# a restart alongside the arrays (the warehouse store uses this). Tree
+# keys may not collide with it.
+_META_KEY = "__meta__"
 
 
 def _compress(raw: bytes) -> bytes:
@@ -95,9 +100,12 @@ def _unflatten(flat: Dict[str, Any]):
     return fix(root)
 
 
-def save(path: str, tree, step: Optional[int] = None, keep: int = 3):
+def save(path: str, tree, step: Optional[int] = None, keep: int = 3,
+         meta: Optional[Dict[str, Any]] = None):
     """Atomic checkpoint save; if ``step`` given, path is a directory and
-    the file is ``<path>/ckpt_<step>.rsk`` with retention."""
+    the file is ``<path>/ckpt_<step>.rsk`` with retention. ``meta`` is an
+    optional dict of plain msgpack-able python values stored alongside
+    the arrays (read back via ``restore(..., return_meta=True)``)."""
     if step is not None:
         os.makedirs(path, exist_ok=True)
         final = os.path.join(path, f"ckpt_{step:08d}.rsk")
@@ -105,11 +113,14 @@ def save(path: str, tree, step: Optional[int] = None, keep: int = 3):
         final = path
         os.makedirs(os.path.dirname(final) or ".", exist_ok=True)
     flat = _flatten(tree)
+    assert _META_KEY not in flat, f"{_META_KEY!r} is a reserved tree key"
     payload = {}
     for k, v in flat.items():
         arr = np.asarray(jax.device_get(v))
         payload[k] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
                       "data": arr.tobytes()}
+    if meta is not None:
+        payload[_META_KEY] = meta
     raw = msgpack.packb(payload, use_bin_type=True)
     comp = _compress(raw)
     tmp = final + ".tmp"
@@ -135,14 +146,17 @@ def latest_step(path: str) -> Optional[int]:
 
 
 def restore(path: str, step: Optional[int] = None, *, mesh=None,
-            shardings=None):
+            shardings=None, return_meta: bool = False):
     """Load a checkpoint; with (mesh, shardings) the arrays are placed
-    sharded (elastic reshard onto whatever mesh exists now)."""
+    sharded (elastic reshard onto whatever mesh exists now). With
+    ``return_meta=True`` returns ``(tree, meta)`` where meta is the dict
+    passed to ``save`` (None for checkpoints written without one)."""
     if step is not None:
         path = os.path.join(path, f"ckpt_{step:08d}.rsk")
     with open(path, "rb") as f:
         raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
+    meta = payload.pop(_META_KEY, None)
     flat = {}
     for k, v in payload.items():
         arr = np.frombuffer(v["data"], dtype=np.dtype(v["dtype"]))
@@ -153,4 +167,4 @@ def restore(path: str, step: Optional[int] = None, *, mesh=None,
             lambda a, s: jax.device_put(jnp.asarray(a), s), tree, shardings)
     else:
         tree = jax.tree.map(jnp.asarray, tree)
-    return tree
+    return (tree, meta) if return_meta else tree

@@ -17,8 +17,15 @@ from repro.core.planner import (plan_value, solve_lp_lagrangian,
 from repro.core.switcher import (SwitchTables, init_state, init_state_multi,
                                  pad_window, run_window, run_window_multi,
                                  stack_tables, switch_step, switch_step_multi)
+# the Load side (paper §2): every engine above accepts a SegmentStore
+# ``sink=`` so ingested runs land in the queryable warehouse. Submodule
+# imports (not the repro.warehouse package) keep the import graph
+# acyclic: warehouse.query pulls repro.core.switcher back in.
+from repro.warehouse.store import SegmentStore
+from repro.warehouse.tiers import TieredStore
 
 __all__ = [
+    "SegmentStore", "TieredStore",
     "Skyscraper", "SkyscraperPool", "classify_1d", "classify_full", "kmeans",
     "forecast", "forecast_from_labels", "init_forecaster",
     "train_forecaster", "RunResult", "best_static_config",

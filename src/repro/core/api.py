@@ -211,12 +211,18 @@ class SkyscraperPool:
 
         pool = SkyscraperPool(fitted_sky, n_streams=8)
         statuses, outputs = pool.process([seg0, ..., seg7])
+
+    ``sink``: an optional ``warehouse.SegmentStore`` (with
+    ``out_dim == len(sky.configs)``) — every tick lands one row per
+    stream in the warehouse: the batched switch decision straight off
+    the device, plus the measured quality reported by the Transform.
     """
 
-    def __init__(self, sky: Skyscraper, n_streams: int):
+    def __init__(self, sky: Skyscraper, n_streams: int, sink=None):
         assert sky._fitted, "fit() the Skyscraper first"
         self.sky = sky
         self.V = n_streams
+        self.sink = sink
         # per-stream buffer/cloud state over shared tables
         self.tables = stack_tables([sky.tables] * n_streams)
         self.state = init_state_multi([sky.tables] * n_streams)
@@ -263,7 +269,15 @@ class SkyscraperPool:
                              "quality": float(q),
                              "buffer_s": float(np.asarray(outs["buffer_s"])[v])})
         # report measured qualities back (drive the next classification)
-        self.state["qual_prev"] = jnp.asarray(q_meas)
+        q_dev = jnp.asarray(q_meas)
+        self.state["qual_prev"] = q_dev
+        if self.sink is not None:
+            # Load: the decision traces are already on device; the only
+            # host-born values are the measured qualities themselves
+            out_vec = (jax.nn.one_hot(outs["k"], K, dtype=jnp.float32)
+                       * q_dev[:, None])
+            self.sink.ingest_tick(outs, quality=q_dev, out_vecs=out_vec,
+                                  t=self._seen)
         self._seen += 1
         if self._seen % self.sky._plan_every == 0:
             self._replan()

@@ -254,12 +254,19 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
                          buffer_gb: float = 4.0,
                          plan_days: Optional[float] = None,
                          forecast_mode: str = "model",
-                         seed: int = 0) -> RunResult:
+                         seed: int = 0, sink=None, sink_stream_id: int = 0,
+                         sink_t0: int = 0) -> RunResult:
     """``run_skyscraper`` as one dispatch: same planning windows, same
     forecasts, same LP, same switcher — fused into a single outer scan
     (results match the windowed loop to float32 tolerance). No
     ``online_finetune``: training inside the scan would defeat the
-    point; use the windowed loop for App. E.2 experiments."""
+    point; use the windowed loop for App. E.2 experiments.
+
+    ``sink``: an optional ``warehouse.SegmentStore`` — the Load side.
+    The engine hands its still-device-resident stacked traces (plus the
+    (T, K) measured-quality vectors as the per-segment output column)
+    straight to ``sink.ingest_fused``, so ingestion -> store is zero
+    per-segment host transfers."""
     w = fitted.workload
     tau = w.segment_seconds
     plan_days = plan_days or fitted.horizon_segments * tau / 86400
@@ -285,6 +292,11 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
         jnp.float32(n_cores * tau), jnp.float32(cloud_budget_core_s),
         mode=forecast_mode, n_split=fitted.n_split,
         interval=fitted.interval_segments)
+    if sink is not None:
+        # Load: the stacked (n_w, W) traces and the (T, K) quality
+        # vectors never leave the device on their way into the store
+        sink.ingest_fused(outs, quals, stream_id=sink_stream_id,
+                          t0=sink_t0)
     # un-window the traces: padding only ever sits at the very end, so
     # the flattened prefix [:T] is the run in time order
     cat = {k: np.asarray(v).reshape((n_w * W,) + v.shape[2:])[:T]
@@ -324,14 +336,18 @@ def _multi_prep(fitteds, streams, *, buffer_gb, cloud_budget_core_s, seed):
     return V, T, K, Cs, C_max, tables, quals, arrs, qmax
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("with_traces",))
 def _fused_run_multi(state, quals_w, arrs_w, valid_w, wts, tables,
-                     cost, core_s_total, cloud_ration):
+                     cost, core_s_total, cloud_ration, *,
+                     with_traces: bool = False):
     """Whole multi-stream run as one program: outer scan over windows;
     each body = per-stream oracle forecast -> joint stacked LP -> the
     batched V-stream window scan. quals_w (n_w, V, W, K); arrs_w/valid_w
-    (n_w, V, W); wts (n_w,) int32. Returns final state + per-window
-    per-stream quality sums (n_w, V)."""
+    (n_w, V, W); wts (n_w,) int32. Returns the final state plus, with
+    ``with_traces`` (a warehouse sink is attached), the full per-segment
+    traces ((n_w, V, W) leaves, padding zeroed); otherwise just the
+    per-window per-stream quality sums (n_w, V), so sink-less runs never
+    materialize V*T traces they would discard."""
     centers = tables.centers                              # (V, C_max, K)
 
     def body(st, xs):
@@ -343,7 +359,7 @@ def _fused_run_multi(state, quals_w, arrs_w, valid_w, wts, tables,
         alpha = solve_lp_stacked(centers, cost, r,
                                  core_s_total + cloud_ration)
         st, outs = window_scan_multi(st, q_w, a_w, valid, alpha, tables)
-        return st, outs["qual"].sum(axis=1)               # padding zeroed
+        return st, (outs if with_traces else outs["qual"].sum(axis=1))
 
     return jax.lax.scan(body, state, (quals_w, arrs_w, valid_w, wts))
 
@@ -354,7 +370,9 @@ register_cache_probe("fused_multi", lambda: _fused_run_multi._cache_size())
 def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
                          cloud_budget_core_s: float = 0.0,
                          buffer_gb: float = 4.0,
-                         plan_days: float = 0.25, seed: int = 0):
+                         plan_days: float = 0.25, seed: int = 0,
+                         sink=None, sink_stream_base: int = 0,
+                         sink_t0: int = 0):
     """Multi-stream ingestion (paper App. D, scenario 1): each stream has
     its own cores + buffer; the cloud budget and the knob PLAN are joint —
     one LP over all streams' categories so the shared budget flows to the
@@ -366,6 +384,10 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
     sentinel-padded (V, C_max, K) category stack), and executes the
     batched V-stream switcher window. Zero host planning work per
     window; one dispatch per run instead of T/W.
+
+    ``sink``: optional ``warehouse.SegmentStore`` — all V streams'
+    per-segment traces land in the store device-side (rows are
+    stream-major; stream ids start at ``sink_stream_base``).
     """
     tau = fitteds[0].workload.segment_seconds
     W = max(1, int(plan_days * 86400 / tau))
@@ -379,13 +401,21 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
         .reshape(V, n_w, W).transpose(1, 0, 2)            # (n_w, V, W)
     valid_w = jnp.broadcast_to((jnp.arange(n_w * W) < T).reshape(n_w, 1, W),
                                (n_w, V, W))
-    _, q_sums = _fused_run_multi(
+    _, res = _fused_run_multi(
         init_state_multi(tables), quals_w, arrs_w, valid_w,
         jnp.asarray(wts), stack_tables(tables),
         jnp.asarray(fitteds[0].cost, jnp.float32),
         jnp.float32(V * n_cores_each * tau),
-        jnp.float32(cloud_budget_core_s / (CLOUD_PREMIUM * max(T, 1))))
-    sums = np.asarray(q_sums).sum(axis=0)
+        jnp.float32(cloud_budget_core_s / (CLOUD_PREMIUM * max(T, 1))),
+        with_traces=sink is not None)
+    if sink is not None:
+        sink.ingest_fused_multi(res, quals, stream_base=sink_stream_base,
+                                t0=sink_t0)
+        # padded segments are exact no-ops, so summing over (n_w, W) is
+        # the per-stream quality total
+        sums = np.asarray(res["qual"]).sum(axis=(0, 2))
+    else:
+        sums = np.asarray(res).sum(axis=0)
     return {"quality_pct": 100.0 * sums.sum() / max(qmax.sum(), 1e-9),
             "per_stream_pct": (100.0 * sums / np.maximum(qmax, 1e-9)).tolist()}
 

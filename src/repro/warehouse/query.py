@@ -1,0 +1,351 @@
+"""Compiled queries over the warehouse (the paper's "easy to query").
+
+A query is a tuple of plan nodes applied left to right:
+
+    Filter(column, op, value)   row predicate; ANDed into the row mask
+    Project(columns)            keep only the named columns
+    GroupBy(key, value, agg)    segment_sum/-max aggregation per key id
+    WindowAgg(window, value)    same, keyed by time window t // window
+    TopK(k, by)                 lax.top_k over a (possibly aggregated)
+                                column; gathers every surviving column
+
+The whole plan compiles to ONE jitted kernel per *plan shape*: filter
+predicates are vmapped masks whose threshold VALUES are dynamic
+operands (re-querying with a new threshold, or after more rows arrive
+within the same chunk capacity, reuses the executable — assert it via
+``compile_cache_size()`` / the registered ``warehouse_query`` probe).
+Aggregations use ``jax.ops.segment_sum`` with static group counts, so
+no data-dependent shapes ever materialize; filtered-out and padding
+rows participate as exact no-ops (weight 0 / -inf).
+
+``execute`` returns ``(table, mask)``: a dict of device columns plus a
+validity mask over its rows (top-k slots beyond the number of matching
+groups are masked off). ``execute_ref`` is the plain-numpy reference
+implementation used by tests and the benchmark baseline; it replicates
+the kernel's row-order summation so fp32 results match exactly.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.switcher import register_cache_probe
+
+
+@dataclass(frozen=True)
+class Filter:
+    column: str
+    op: str              # eq | ne | lt | le | gt | ge
+    value: float         # dynamic operand: changing it never recompiles
+
+
+@dataclass(frozen=True)
+class Project:
+    columns: Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class GroupBy:
+    key: str             # integer column holding the group id
+    value: str           # column to aggregate
+    agg: str = "sum"     # sum | mean | count | max | min
+    num_groups: int = 8  # static: group ids clip into [0, num_groups)
+
+
+@dataclass(frozen=True)
+class WindowAgg:
+    window: int          # segments per time window (ids = t // window)
+    value: str
+    agg: str = "sum"
+    num_windows: int = 64
+
+
+@dataclass(frozen=True)
+class TopK:
+    k: int
+    by: str
+    largest: bool = True
+
+
+PlanNode = Union[Filter, Project, GroupBy, WindowAgg, TopK]
+
+
+@dataclass(frozen=True)
+class _FilterRef:
+    """Filter with its value hoisted into the dynamic operand vector, so
+    the jitted plan is value-independent."""
+    column: str
+    op: str
+    idx: int
+
+
+_CMP = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+}
+
+
+def _int_pred(x, op, i, is_int):
+    """Exact real-number comparison of an INTEGER column x against a
+    threshold given as (floor, integral?) — computed host-side in
+    float64, so neither side ever rounds through f32 (which collapses
+    ints past 2^24; the append-only ``t`` column crosses that after
+    ~388 days of 2 s segments). All branches are dynamic operands:
+    changing the threshold, integral or not, never recompiles."""
+    i = i.astype(x.dtype)             # floor(v), the largest int <= v
+    if op == "ge":                    # x >= v
+        return jnp.where(is_int, x >= i, x >= i + 1)
+    if op == "gt":                    # x > v  <=>  x >= floor(v)+1
+        return x >= i + 1
+    if op == "le":                    # x <= v  <=>  x <= floor(v)
+        return x <= i
+    if op == "lt":                    # x < v
+        return jnp.where(is_int, x <= i - 1, x <= i)
+    if op == "eq":
+        return is_int & (x == i)
+    return ~is_int | (x != i)         # ne
+
+
+def normalize(plan):
+    """Split a plan into its static shape (hashable spec) and the
+    dynamic filter-value operands: the f32 thresholds (float columns)
+    plus each threshold's float64-computed floor and integrality
+    (integer columns — f32 can't hold ints past 2^24, so those are
+    hoisted host-side at full precision)."""
+    spec, vals, floors, isint = [], [], [], []
+    for node in plan:
+        if isinstance(node, Filter):
+            assert node.op in _CMP, f"unknown filter op {node.op!r}"
+            spec.append(_FilterRef(node.column, node.op, len(vals)))
+            v = float(node.value)
+            assert not math.isnan(v), "NaN filter threshold"
+            vals.append(np.float32(v))
+            # symmetric clamp: _int_pred computes i±1, so the floor must
+            # stay one step inside int32 on BOTH ends (an unclamped
+            # -2^31 would wrap `lt`'s i-1 to +2^31-1 and match rows a
+            # float64 comparison rejects). +/-inf clamps to the end
+            # matching its sign. Thresholds beyond the clamp are only
+            # approximate at the extreme +/-2^31 edge of int32 data.
+            if math.isinf(v):
+                fl = (2 ** 31 - 2) if v > 0 else (-2 ** 31 + 1)
+            else:
+                fl = min(max(math.floor(v), -2 ** 31 + 1), 2 ** 31 - 2)
+            floors.append(np.int32(fl))
+            isint.append(math.isfinite(v) and v == fl)
+        else:
+            spec.append(node)
+    return tuple(spec), (jnp.asarray(np.asarray(vals, np.float32)),
+                         jnp.asarray(np.asarray(floors, np.int32)),
+                         jnp.asarray(np.asarray(isint, bool)))
+
+
+def _aggregate(table, mask, ids, num, value, agg):
+    """Masked segment aggregation with a static group count."""
+    v = table[value].astype(jnp.float32)
+    ids = jnp.clip(ids.astype(jnp.int32), 0, num - 1)
+    if agg in ("sum", "mean", "count"):
+        # value and count share ONE scatter pass (the scatter is the
+        # whole cost of the kernel on CPU); per-column addition order
+        # is unchanged, so results still match the numpy reference
+        # bit-exact
+        both = jax.ops.segment_sum(
+            jnp.stack([jnp.where(mask, v, 0.0),
+                       mask.astype(jnp.float32)], axis=1),
+            ids, num_segments=num)
+        out, cnt = both[:, 0], both[:, 1]
+        if agg == "mean":
+            out = out / jnp.maximum(cnt, 1.0)
+        elif agg == "count":
+            out = cnt
+        return out, cnt
+    cnt = jax.ops.segment_sum(mask.astype(jnp.float32), ids,
+                              num_segments=num)
+    if agg == "max":
+        out = jax.ops.segment_max(jnp.where(mask, v, -jnp.inf), ids,
+                                  num_segments=num)
+        out = jnp.where(cnt > 0, out, 0.0)
+    elif agg == "min":
+        out = jax.ops.segment_min(jnp.where(mask, v, jnp.inf), ids,
+                                  num_segments=num)
+        out = jnp.where(cnt > 0, out, 0.0)
+    else:
+        raise ValueError(f"unknown agg {agg!r}")
+    return out, cnt
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _run_plan(cols, n_rows, fvals, *, spec):
+    cap = cols["t"].shape[0] if "t" in cols else \
+        next(iter(cols.values())).shape[0]
+    mask = jnp.arange(cap) < n_rows
+    table = cols
+    for node in spec:
+        if isinstance(node, _FilterRef):
+            vals, floors, isint = fvals
+            col = table[node.column]
+            if jnp.issubdtype(col.dtype, jnp.integer):
+                i, ii = floors[node.idx], isint[node.idx]
+                pred = jax.vmap(
+                    lambda x: _int_pred(x, node.op, i, ii))(col)
+            else:
+                v = vals[node.idx]
+                pred = jax.vmap(
+                    lambda x: _CMP[node.op](x.astype(jnp.float32), v))(col)
+            mask = mask & pred
+        elif isinstance(node, Project):
+            table = {c: table[c] for c in node.columns}
+        elif isinstance(node, GroupBy):
+            out, cnt = _aggregate(table, mask, table[node.key],
+                                  node.num_groups, node.value, node.agg)
+            table = {node.key: jnp.arange(node.num_groups, dtype=jnp.int32),
+                     node.value: out, "count": cnt}
+            mask = cnt > 0
+        elif isinstance(node, WindowAgg):
+            out, cnt = _aggregate(table, mask, table["t"] // node.window,
+                                  node.num_windows, node.value, node.agg)
+            table = {"window": jnp.arange(node.num_windows,
+                                          dtype=jnp.int32),
+                     node.value: out, "count": cnt}
+            mask = cnt > 0
+        elif isinstance(node, TopK):
+            score = jnp.where(mask, table[node.by].astype(jnp.float32),
+                              -jnp.inf)
+            score = score if node.largest else jnp.where(
+                jnp.isfinite(score), -score, score)
+            kk = min(node.k, int(score.shape[0]))
+            top, idx = jax.lax.top_k(score, kk)
+            table = {c: jnp.take(table[c], idx, axis=0) for c in table}
+            table["index"] = idx
+            mask = jnp.isfinite(top)
+        else:
+            raise TypeError(f"unknown plan node {node!r}")
+    return table, mask
+
+
+register_cache_probe("warehouse_query", lambda: _run_plan._cache_size())
+
+
+def compile_cache_size() -> int:
+    """jit cache entries of the query kernel: one per distinct plan
+    shape x store capacity — stable across repeated queries (changed
+    filter values, appended rows within the same chunk capacity)."""
+    return _run_plan._cache_size()
+
+
+def _source(store):
+    """(columns, n_rows) from a SegmentStore, a TieredStore (which
+    materializes its cold tier on device), or a raw (columns, n) pair."""
+    if hasattr(store, "materialize"):
+        return store.materialize()
+    if hasattr(store, "columns") and hasattr(store, "n_rows"):
+        return store.columns, store.n_rows
+    cols, n = store
+    return cols, n
+
+
+def execute(store, plan):
+    """Run ``plan`` over ``store`` as one compiled dispatch; returns
+    ``(table, mask)`` of device arrays."""
+    cols, n_rows = _source(store)
+    spec, fvals = normalize(plan)
+    return _run_plan(cols, jnp.int32(n_rows), fvals, spec=spec)
+
+
+def windows_for(store, window: int) -> int:
+    """Static window count covering every stored timestamp."""
+    t_max = store.t_max if hasattr(store, "t_max") else store.hot.t_max
+    return max(1, int(t_max) // int(window) + 1)
+
+
+def to_host(table, mask) -> Dict[str, np.ndarray]:
+    """Compact a query result to host numpy, dropping masked-off rows."""
+    m = np.asarray(mask)
+    return {k: np.asarray(v)[m] for k, v in table.items()}
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (tests + benchmark correctness baseline)
+# ---------------------------------------------------------------------------
+
+def _np_aggregate(table, mask, ids, num, value, agg):
+    v = np.asarray(table[value], np.float32)
+    ids = np.clip(np.asarray(ids, np.int64), 0, num - 1)
+    cnt = np.zeros(num, np.float32)
+    np.add.at(cnt, ids[mask], np.float32(1.0))
+    if agg == "count":
+        out = cnt
+    elif agg in ("sum", "mean"):
+        out = np.zeros(num, np.float32)
+        # np.add.at accumulates in row order — the same fp32 addition
+        # sequence as the kernel's segment_sum, so sums match bit-exact
+        np.add.at(out, ids[mask], v[mask])
+        if agg == "mean":
+            out = out / np.maximum(cnt, 1.0)
+    elif agg == "max":
+        out = np.full(num, -np.inf, np.float32)
+        np.maximum.at(out, ids[mask], v[mask])
+        out = np.where(cnt > 0, out, 0.0).astype(np.float32)
+    elif agg == "min":
+        out = np.full(num, np.inf, np.float32)
+        np.minimum.at(out, ids[mask], v[mask])
+        out = np.where(cnt > 0, out, 0.0).astype(np.float32)
+    else:
+        raise ValueError(agg)
+    return out, cnt
+
+
+def execute_ref(cols: Dict[str, np.ndarray], n_rows: int, plan):
+    """Plain-numpy mirror of ``execute`` (same clipping, masking, and
+    summation-order semantics). Returns ``(table, mask)`` in numpy."""
+    cap = len(next(iter(cols.values())))
+    mask = np.arange(cap) < n_rows
+    table = {k: np.asarray(v) for k, v in cols.items()}
+    for node in plan:
+        if isinstance(node, Filter):
+            x = table[node.column]
+            if np.issubdtype(x.dtype, np.integer):
+                # exact: int32 values and the host-side threshold both
+                # embed in float64 (mirrors the kernel's _int_pred)
+                mask = mask & _CMP[node.op](x.astype(np.float64),
+                                            np.float64(node.value))
+            else:
+                mask = mask & _CMP[node.op](x.astype(np.float32),
+                                            np.float32(node.value))
+        elif isinstance(node, Project):
+            table = {c: table[c] for c in node.columns}
+        elif isinstance(node, GroupBy):
+            out, cnt = _np_aggregate(table, mask, table[node.key],
+                                     node.num_groups, node.value, node.agg)
+            table = {node.key: np.arange(node.num_groups, dtype=np.int32),
+                     node.value: out, "count": cnt}
+            mask = cnt > 0
+        elif isinstance(node, WindowAgg):
+            out, cnt = _np_aggregate(table, mask, table["t"] // node.window,
+                                     node.num_windows, node.value, node.agg)
+            table = {"window": np.arange(node.num_windows, dtype=np.int32),
+                     node.value: out, "count": cnt}
+            mask = cnt > 0
+        elif isinstance(node, TopK):
+            score = np.where(mask, table[node.by].astype(np.float32),
+                             -np.inf)
+            if not node.largest:
+                score = np.where(np.isfinite(score), -score, score)
+            kk = min(node.k, len(score))
+            idx = np.argsort(-score, kind="stable")[:kk].astype(np.int32)
+            top = score[idx]
+            table = {c: np.take(table[c], idx, axis=0) for c in table}
+            table["index"] = idx
+            mask = np.isfinite(top)
+        else:
+            raise TypeError(f"unknown plan node {node!r}")
+    return table, mask

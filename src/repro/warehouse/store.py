@@ -1,0 +1,266 @@
+"""V-ETL *Load*: a device-resident columnar segment store.
+
+The paper frames video analytics as data warehousing: Extract decodes,
+Transform runs the content-adaptive UDFs, and **Load** lands every
+segment's results "in an application-specific format that is easy to
+query". Before this module the fused engines reduced a run to a
+``RunResult`` summary and threw the per-segment outputs away.
+
+``SegmentStore`` is append-only, chunked, and columnar: one device
+array per column, grown in ``chunk_rows`` multiples so the set of array
+shapes (and therefore jit executables) stays small. Columns:
+
+    stream_id     int32   which camera/stream produced the segment
+    t             int32   segment index on that stream's timeline
+    category      int32   content category the switcher classified
+    k             int32   knob configuration the switcher chose
+    quality       f32     measured quality of the chosen config
+    on_core_s     f32     on-prem work spent (core-seconds)
+    cloud_core_s  f32     cloud work spent (core-seconds)
+    buffer_s      f32     buffer fill after the segment (seconds)
+    out           f32     fixed-width application output / embedding (D,)
+
+Ingestion is batched and device-side: ``ingest_fused`` takes the fused
+whole-run engine's *stacked* traces (``(n_w, W)`` leaves, still on
+device) and writes all columns in ONE jitted dispatch — flattening,
+tail-slicing, column synthesis (stream_id/t) and the scatter all live
+in the same program, so nothing round-trips through the host per
+segment. ``ingest_fused_multi`` does the same for the (n_w, V, W)
+multi-stream traces and ``ingest_tick`` lands one row per live stream
+from a serving-pool tick.
+
+The store is a registered JAX pytree (columns are leaves; row count and
+chunking are static aux), so it passes through jit/vmap and flattens
+for checkpointing (see ``warehouse.tiers``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.switcher import register_cache_probe
+
+SCALAR_COLUMNS = (
+    ("stream_id", jnp.int32),
+    ("t", jnp.int32),
+    ("category", jnp.int32),
+    ("k", jnp.int32),
+    ("quality", jnp.float32),
+    ("on_core_s", jnp.float32),
+    ("cloud_core_s", jnp.float32),
+    ("buffer_s", jnp.float32),
+)
+OUT_COLUMN = "out"
+
+# fused-run trace key -> store column
+_RUN_KEYS = (("c", "category"), ("k", "k"), ("qual", "quality"),
+             ("on_s", "on_core_s"), ("cl_s", "cloud_core_s"),
+             ("buffer_s", "buffer_s"))
+
+
+def _empty_columns(cap: int, out_dim: int) -> Dict[str, jnp.ndarray]:
+    cols = {n: jnp.zeros((cap,), dt) for n, dt in SCALAR_COLUMNS}
+    cols[OUT_COLUMN] = jnp.zeros((cap, out_dim), jnp.float32)
+    return cols
+
+
+def _put_all(cols, upd, offset):
+    """Write every column's update block at row ``offset`` (dynamic)."""
+    def put(dst, src):
+        idx = (offset,) + (0,) * (src.ndim - 1)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), idx)
+    return {k: put(cols[k], upd[k]) for k in cols}
+
+
+_scatter = jax.jit(_put_all)
+
+
+@functools.partial(jax.jit, static_argnames=("T",))
+def _ingest_fused(cols, traces, out_vecs, stream_id, t0, offset, *, T):
+    """One device op: flatten the fused engine's stacked (n_w, W) traces,
+    drop the tail padding, synthesize stream_id/t, scatter all columns."""
+    upd = {dst: traces[src].reshape(-1)[:T] for src, dst in _RUN_KEYS}
+    upd["stream_id"] = jnp.full((T,), stream_id, jnp.int32)
+    upd["t"] = t0 + jnp.arange(T, dtype=jnp.int32)
+    upd[OUT_COLUMN] = out_vecs
+    return _put_all(cols, upd, offset)
+
+
+@functools.partial(jax.jit, static_argnames=("T",))
+def _ingest_fused_multi(cols, traces, out_vecs, stream_base, t0, offset, *,
+                        T):
+    """Multi-stream ingest: traces have (n_w, V, W) leaves; rows land
+    stream-major ((stream 0 t=0..T-1), (stream 1 ...), ...)."""
+    V = out_vecs.shape[0]
+
+    def flat(x):                                  # (n_w, V, W) -> (V*T,)
+        return jnp.swapaxes(x, 0, 1).reshape(V, -1)[:, :T].reshape(-1)
+
+    upd = {dst: flat(traces[src]) for src, dst in _RUN_KEYS}
+    upd["stream_id"] = (stream_base
+                        + jnp.repeat(jnp.arange(V, dtype=jnp.int32), T))
+    upd["t"] = t0 + jnp.tile(jnp.arange(T, dtype=jnp.int32), V)
+    upd[OUT_COLUMN] = out_vecs.reshape(V * T, -1)
+    return _put_all(cols, upd, offset)
+
+
+@jax.jit
+def _ingest_tick(cols, traces, quality, out_vecs, t, offset):
+    """One serving-pool tick: V rows (one per live stream)."""
+    V = quality.shape[0]
+    upd = {dst: traces[src] for src, dst in _RUN_KEYS}
+    upd["quality"] = quality          # measured by the user's Transform
+    upd["stream_id"] = jnp.arange(V, dtype=jnp.int32)
+    upd["t"] = jnp.full((V,), t, jnp.int32)
+    upd[OUT_COLUMN] = out_vecs
+    return _put_all(cols, upd, offset)
+
+
+class SegmentStore:
+    """Append-only columnar store for per-segment V-ETL results."""
+
+    def __init__(self, out_dim: int, chunk_rows: int = 8192):
+        assert out_dim >= 1 and chunk_rows >= 1
+        self.out_dim = int(out_dim)
+        self.chunk_rows = int(chunk_rows)
+        self.n_rows = 0
+        self.t_max = -1
+        self.columns = _empty_columns(0, out_dim)
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.columns["t"].shape[0]
+
+    def _reserve(self, n_new: int) -> None:
+        need = self.n_rows + n_new
+        if need <= self.capacity:
+            return
+        # geometric growth (chunk-aligned): amortized O(1) copies and
+        # O(log n) distinct capacities, so the executables specialized
+        # on capacity (append/query kernels) stay few for the store's
+        # whole lifetime
+        cap = -(-max(need, 2 * self.capacity)
+                // self.chunk_rows) * self.chunk_rows
+        grown = _empty_columns(cap, self.out_dim)
+        if self.n_rows:
+            grown = {k: jax.lax.dynamic_update_slice(
+                grown[k], self.columns[k], (0,) * grown[k].ndim)
+                for k in grown}
+        self.columns = grown
+
+    # -- ingestion -----------------------------------------------------
+    def ingest_fused(self, traces, out_vecs, *, stream_id: int = 0,
+                     t0: int = 0) -> int:
+        """Land a full ``run_skyscraper_fused`` run: ``traces`` is the
+        engine's stacked outs dict ((n_w, W) device leaves), ``out_vecs``
+        the (T, D) per-segment output/embedding block (e.g. the measured
+        quality vectors). Returns the number of rows appended."""
+        T = int(out_vecs.shape[0])
+        assert out_vecs.ndim == 2 and out_vecs.shape[1] == self.out_dim, \
+            f"out_vecs must be (T, {self.out_dim})"
+        self._reserve(T)
+        sub = {src: traces[src] for src, _ in _RUN_KEYS}
+        self.columns = _ingest_fused(
+            self.columns, sub, jnp.asarray(out_vecs, jnp.float32),
+            jnp.int32(stream_id), jnp.int32(t0), jnp.int32(self.n_rows),
+            T=T)
+        self.n_rows += T
+        self.t_max = max(self.t_max, t0 + T - 1)
+        return T
+
+    def ingest_fused_multi(self, traces, out_vecs, *, stream_base: int = 0,
+                           t0: int = 0) -> int:
+        """Land a full ``run_skyscraper_multi`` run: traces have
+        (n_w, V, W) device leaves, ``out_vecs`` is (V, T, D)."""
+        V, T = int(out_vecs.shape[0]), int(out_vecs.shape[1])
+        assert out_vecs.ndim == 3 and out_vecs.shape[2] == self.out_dim
+        self._reserve(V * T)
+        sub = {src: traces[src] for src, _ in _RUN_KEYS}
+        self.columns = _ingest_fused_multi(
+            self.columns, sub, jnp.asarray(out_vecs, jnp.float32),
+            jnp.int32(stream_base), jnp.int32(t0), jnp.int32(self.n_rows),
+            T=T)
+        self.n_rows += V * T
+        self.t_max = max(self.t_max, t0 + T - 1)
+        return V * T
+
+    def ingest_tick(self, traces, *, quality, out_vecs, t: int) -> int:
+        """Land one serving-pool tick: traces have (V,) device leaves
+        (a ``switch_step_multi`` outs dict); ``quality`` (V,) is the
+        measured quality reported by the user's Transform."""
+        V = int(out_vecs.shape[0])
+        assert out_vecs.ndim == 2 and out_vecs.shape[1] == self.out_dim
+        self._reserve(V)
+        sub = {src: traces[src] for src, _ in _RUN_KEYS}
+        self.columns = _ingest_tick(
+            self.columns, sub, jnp.asarray(quality, jnp.float32),
+            jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
+            jnp.int32(self.n_rows))
+        self.n_rows += V
+        self.t_max = max(self.t_max, t)
+        return V
+
+    def append_rows(self, rows: Dict[str, jnp.ndarray]) -> int:
+        """Generic batched append: ``rows`` maps every column name to an
+        (n,) array (``out`` to (n, D)). Host-facing convenience for
+        tests and manual loads."""
+        n = int(np.shape(rows["t"])[0])
+        assert set(rows) == set(self.columns), \
+            f"need exactly columns {sorted(self.columns)}"
+        self._reserve(n)
+        upd = {k: jnp.asarray(v) for k, v in rows.items()}
+        self.columns = _scatter(self.columns, upd, jnp.int32(self.n_rows))
+        self.n_rows += n
+        self.t_max = max(self.t_max, int(np.max(np.asarray(rows["t"]))))
+        return n
+
+    # -- reading -------------------------------------------------------
+    def query(self, plan):
+        """Run a compiled query plan over the live rows (see
+        ``warehouse.query``)."""
+        from repro.warehouse import query as Q
+        return Q.execute(self, plan)
+
+    def host_rows(self) -> Dict[str, np.ndarray]:
+        """All live rows as host numpy (an explicit full transfer — for
+        tests, references, and exports; the query path never needs it).
+        """
+        return {k: np.asarray(v)[: self.n_rows]
+                for k, v in self.columns.items()}
+
+    def __len__(self) -> int:
+        return self.n_rows
+
+    def __repr__(self) -> str:
+        return (f"SegmentStore(rows={self.n_rows}, cap={self.capacity}, "
+                f"out_dim={self.out_dim}, chunk={self.chunk_rows})")
+
+
+def _store_flatten(s: SegmentStore):
+    keys = tuple(sorted(s.columns))
+    return (tuple(s.columns[k] for k in keys),
+            (keys, s.out_dim, s.chunk_rows, s.n_rows, s.t_max))
+
+
+def _store_unflatten(aux, children) -> SegmentStore:
+    keys, out_dim, chunk_rows, n_rows, t_max = aux
+    s = SegmentStore.__new__(SegmentStore)
+    s.out_dim, s.chunk_rows = out_dim, chunk_rows
+    s.n_rows, s.t_max = n_rows, t_max
+    s.columns = dict(zip(keys, children))
+    return s
+
+
+jax.tree_util.register_pytree_node(SegmentStore, _store_flatten,
+                                   _store_unflatten)
+
+register_cache_probe(
+    "warehouse_append",
+    lambda: (_scatter._cache_size() + _ingest_fused._cache_size()
+             + _ingest_fused_multi._cache_size()
+             + _ingest_tick._cache_size()))

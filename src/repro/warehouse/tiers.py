@@ -1,0 +1,195 @@
+"""Warehouse tiering + persistence.
+
+Hot tier: the fp32 ``SegmentStore`` chunks that queries touch most.
+Cold tier: older chunks spilled to int8 with one quantization scale per
+chunk (reusing ``distribution.compression.quantize_int8``, so the cold
+tier inherits its stochastic-rounding error bound: per-element error is
+at most the chunk's scale = max|x|/127). Integer columns spill
+losslessly. ``spill`` moves whole chunks so every tier keeps
+chunk-aligned shapes and the jit executables stay shared.
+
+Queries run over BOTH tiers: ``materialize`` dequantizes the cold
+chunks and concatenates them in front of the hot columns in one jitted
+device op, and the compiled query kernel scans the combined table —
+fp32-exact on the hot rows, within quantization tolerance on cold ones.
+
+``save_warehouse``/``load_warehouse`` persist the whole thing through
+``checkpoint/ckpt.py`` (atomic, mesh-agnostic, host-count independent),
+so a warehouse survives process restart onto any topology: the hot tier
+round-trips bit-exact (raw fp32 bytes), the cold tier's int8 codes and
+scales likewise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.distribution.compression import dequantize, quantize_int8
+from repro.warehouse.store import SegmentStore
+
+
+@functools.partial(jax.jit, static_argnames=("n", "chunk"))
+def _quantize_chunks(cols, key, *, n: int, chunk: int):
+    """Quantize the first ``n`` rows (a whole number of chunks) of every
+    float column to int8 with a per-chunk scale; integer columns pass
+    through. Output/embedding rows quantize with their chunk flattened
+    so the (chunk, D) block shares one scale."""
+    n_chunks = n // chunk
+    keys = jax.random.split(key, n_chunks)
+    q, scales, ints = {}, {}, {}
+    for name, col in cols.items():
+        block = col[:n]
+        if col.dtype == jnp.float32:
+            flat = block.reshape(n_chunks, -1)
+            qq, ss = jax.vmap(quantize_int8)(flat, keys)
+            q[name] = qq.reshape(block.shape)
+            scales[name] = ss
+        else:
+            ints[name] = block
+    return q, scales, ints
+
+
+@functools.partial(jax.jit, static_argnames=("n_spill",))
+def _compact(cols, *, n_spill: int):
+    """Drop the spilled prefix from the hot tier: shift the survivors to
+    row 0 and zero the tail (capacity unchanged)."""
+    return {k: jnp.concatenate(
+        [v[n_spill:], jnp.zeros((n_spill,) + v.shape[1:], v.dtype)])
+        for k, v in cols.items()}
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _materialize(cold_q, cold_scales, cold_int, hot_cols, *, chunk: int):
+    """Combined view for the query kernel: dequantized cold rows
+    followed by the hot columns, one device op."""
+    out = {}
+    for name, hot in hot_cols.items():
+        if name in cold_q:
+            qq = cold_q[name]
+            n_chunks = qq.shape[0] // chunk
+            deq = jax.vmap(dequantize)(qq.reshape(n_chunks, -1),
+                                       cold_scales[name])
+            cold = deq.reshape(qq.shape).astype(hot.dtype)
+        else:
+            cold = cold_int[name]
+        out[name] = jnp.concatenate([cold, hot])
+    return out
+
+
+class TieredStore:
+    """A ``SegmentStore`` hot tier plus an int8 cold tier it spills to."""
+
+    def __init__(self, hot: SegmentStore, seed: int = 0):
+        self.hot = hot
+        self.seed = int(seed)
+        self.n_cold = 0
+        self.cold_q: Dict[str, jnp.ndarray] = {}
+        self.cold_scales: Dict[str, jnp.ndarray] = {}
+        self.cold_int: Dict[str, jnp.ndarray] = {}
+        # memoized combined view; keyed on the hot columns object (every
+        # append/spill replaces that dict) + the cold row count
+        self._mat_cache = None
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_cold + self.hot.n_rows
+
+    @property
+    def t_max(self) -> int:
+        return self.hot.t_max
+
+    def spill(self, keep_hot: int) -> int:
+        """Move the oldest whole chunks to the cold tier until at most
+        ``keep_hot`` rows (rounded up to a chunk) stay hot. Returns the
+        number of rows spilled."""
+        # keep_hot >= 0 keeps n_spill <= n_rows: capacity padding can
+        # never enter the cold tier as phantom data
+        assert keep_hot >= 0, keep_hot
+        chunk = self.hot.chunk_rows
+        n_spill = ((self.hot.n_rows - keep_hot) // chunk) * chunk
+        if n_spill <= 0:
+            return 0
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), self.n_cold)
+        q, scales, ints = _quantize_chunks(self.hot.columns, key,
+                                           n=n_spill, chunk=chunk)
+        if self.n_cold:
+            q = {k: jnp.concatenate([self.cold_q[k], v])
+                 for k, v in q.items()}
+            scales = {k: jnp.concatenate([self.cold_scales[k], v])
+                      for k, v in scales.items()}
+            ints = {k: jnp.concatenate([self.cold_int[k], v])
+                    for k, v in ints.items()}
+        self.cold_q, self.cold_scales, self.cold_int = q, scales, ints
+        self.n_cold += n_spill
+        self.hot.columns = _compact(self.hot.columns, n_spill=n_spill)
+        self.hot.n_rows -= n_spill
+        return n_spill
+
+    def materialize(self) -> Tuple[Dict[str, jnp.ndarray], int]:
+        """(columns, n_rows) spanning both tiers — what the compiled
+        query kernel scans. Valid rows stay a prefix: cold rows are
+        oldest-first, hot live rows are a prefix of the hot arrays.
+        Memoized: repeat queries between appends/spills reuse the
+        combined view instead of re-dequantizing the cold tier."""
+        if self.n_cold == 0:
+            return self.hot.columns, self.hot.n_rows
+        c = self._mat_cache
+        if c is not None and c[0] is self.hot.columns \
+                and c[1] == self.n_cold:
+            return c[2], self.n_rows
+        cols = _materialize(self.cold_q, self.cold_scales, self.cold_int,
+                            self.hot.columns, chunk=self.hot.chunk_rows)
+        self._mat_cache = (self.hot.columns, self.n_cold, cols)
+        return cols, self.n_rows
+
+    def query(self, plan):
+        from repro.warehouse import query as Q
+        return Q.execute(self, plan)
+
+    def max_cold_scale(self) -> float:
+        """Largest per-chunk quantization scale across the cold tier —
+        the per-element error bound of cold-row values."""
+        if not self.cold_scales:
+            return 0.0
+        return max(float(jnp.max(s)) for s in self.cold_scales.values())
+
+    def __repr__(self) -> str:
+        return (f"TieredStore(hot={self.hot.n_rows}, cold={self.n_cold}, "
+                f"chunk={self.hot.chunk_rows})")
+
+
+# ---------------------------------------------------------------------------
+# persistence (through checkpoint/ckpt.py)
+# ---------------------------------------------------------------------------
+
+def save_warehouse(path: str, ts: TieredStore) -> str:
+    """Atomic save of both tiers; restores onto any host/topology."""
+    tree = {"hot": ts.hot.columns}
+    if ts.n_cold:
+        tree["cold"] = {"q": ts.cold_q, "scales": ts.cold_scales,
+                        "ints": ts.cold_int}
+    meta = {"n_rows": ts.hot.n_rows, "t_max": ts.hot.t_max,
+            "out_dim": ts.hot.out_dim, "chunk_rows": ts.hot.chunk_rows,
+            "n_cold": ts.n_cold, "seed": ts.seed}
+    return ckpt.save(path, tree, meta=meta)
+
+
+def load_warehouse(path: str) -> TieredStore:
+    tree, meta = ckpt.restore(path, return_meta=True)
+    assert meta is not None, f"{path} is not a warehouse checkpoint"
+    hot = SegmentStore(meta["out_dim"], chunk_rows=meta["chunk_rows"])
+    hot.columns = tree["hot"]
+    hot.n_rows = meta["n_rows"]
+    hot.t_max = meta["t_max"]
+    ts = TieredStore(hot, seed=meta["seed"])
+    ts.n_cold = meta["n_cold"]
+    if ts.n_cold:
+        ts.cold_q = tree["cold"]["q"]
+        ts.cold_scales = tree["cold"]["scales"]
+        ts.cold_int = tree["cold"]["ints"]
+    return ts

@@ -5,6 +5,8 @@ import sys
 # XLA_FLAGS before importing jax) — do NOT force a device count here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
+# repo root, so tests can reuse benchmark fixtures (benchmarks.*)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 # Property tests use hypothesis (requirements-dev.txt). In hermetic
 # environments without it, fall back to the minimal deterministic

@@ -44,6 +44,27 @@ def test_no_tmp_left_behind(tmp_path):
     assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
 
 
+def test_meta_roundtrip(tmp_path):
+    """Plain-python metadata rides alongside the arrays (the warehouse
+    persists row counts / chunking this way) and is invisible to
+    readers that don't ask for it."""
+    tree = {"w": jnp.arange(4, dtype=jnp.float32),
+            "q": jnp.array([-3, 7], jnp.int8)}
+    meta = {"n_rows": 12345, "chunk_rows": 512, "tag": "hot",
+            "nested": {"seed": 3}}
+    p = CK.save(str(tmp_path / "m.rsk"), tree, meta=meta)
+    back, got = CK.restore(p, return_meta=True)
+    tree_eq(tree, back)
+    assert back["q"].dtype == jnp.int8
+    assert got == meta
+    # default restore ignores the metadata entirely
+    tree_eq(tree, CK.restore(p))
+    # checkpoints written without meta report None
+    p2 = CK.save(str(tmp_path / "nometa.rsk"), tree)
+    _, none_meta = CK.restore(p2, return_meta=True)
+    assert none_meta is None
+
+
 def test_adamw_converges_quadratic():
     params = {"w": jnp.asarray([5.0, -3.0])}
     opt = adamw_init(params)
