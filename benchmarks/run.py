@@ -2,13 +2,22 @@
 derived`` CSV rows (one module per paper artifact — see DESIGN.md §6).
 
     PYTHONPATH=src:. python benchmarks/run.py [only] [--json OUT]
+                                              [--compare OLD.json]
 
 ``only`` filters modules by substring. ``--json OUT`` additionally
 writes a perf snapshot (bench name -> metric dict, with the numeric
 fields of each row's ``derived`` string parsed out) so the repo's bench
 trajectory can be tracked across PRs, e.g.::
 
-    python benchmarks/run.py --json BENCH_PR3.json
+    python benchmarks/run.py --json BENCH_PR4.json
+
+``--compare OLD.json`` loads a prior snapshot after the run, prints the
+per-metric deltas, and exits non-zero if any FLOOR metric (a metric
+whose key contains one of ``_FLOOR_KEYS`` — speedup factors and scan
+throughputs, the numbers the engine benches assert lower bounds on)
+regressed by more than 20%::
+
+    python benchmarks/run.py --json BENCH_NEW.json --compare BENCH_PR3.json
 """
 from __future__ import annotations
 
@@ -18,6 +27,11 @@ import sys
 import traceback
 
 _NUM = re.compile(r"-?\d+(?:\.\d+)?(?:[eE]-?\d+)?")
+
+# metric-name substrings treated as perf FLOORS (bigger is better);
+# --compare fails the run when one drops >20% vs the old snapshot
+_FLOOR_KEYS = ("speedup", "scan")
+_FLOOR_DROP = 0.20
 
 
 def _metric_dict(row) -> dict:
@@ -34,20 +48,72 @@ def _metric_dict(row) -> dict:
     return out
 
 
+def _compare(snap: dict, old_path: str) -> int:
+    """Print per-metric deltas vs a prior snapshot; return the number of
+    >20% floor-metric regressions. A floor metric that existed in the
+    baseline but is MISSING from this run (the bench errored out, was
+    filtered away, or its derived key was renamed) counts as a
+    regression too — a gate that goes green when its benchmark
+    disappears is no gate."""
+    with open(old_path) as f:
+        old = json.load(f)
+    regressions = []
+    for name in sorted(snap):
+        if name not in old:
+            print(f"# {name}: new bench (no baseline)")
+            continue
+        for key, new_v in sorted(snap[name].items()):
+            old_v = old[name].get(key)
+            if not isinstance(new_v, (int, float)) \
+                    or not isinstance(old_v, (int, float)) or old_v == 0:
+                continue
+            delta = (new_v - old_v) / abs(old_v)
+            is_floor = any(fk in key for fk in _FLOOR_KEYS)
+            flag = " [floor]" if is_floor else ""
+            if is_floor and new_v < old_v * (1.0 - _FLOOR_DROP):
+                flag = " [floor] REGRESSION >20%"
+                regressions.append(f"{name}.{key}")
+            print(f"{name}.{key}: {old_v:.4g} -> {new_v:.4g} "
+                  f"({delta:+.1%}){flag}")
+    # baseline floor metrics this run no longer reports at all
+    for name, metrics in sorted(old.items()):
+        missing = [key for key, old_v in metrics.items()
+                   if isinstance(old_v, (int, float))
+                   and any(fk in key for fk in _FLOOR_KEYS)
+                   and not isinstance(snap.get(name, {}).get(key),
+                                      (int, float))]
+        if name not in snap:
+            print(f"# {name}: missing from this run (was in baseline)")
+        for key in missing:
+            print(f"{name}.{key}: {metrics[key]:.4g} -> MISSING "
+                  f"[floor] REGRESSION (metric disappeared)")
+            regressions.append(f"{name}.{key}")
+    if regressions:
+        print(f"FAIL: floor metrics regressed >20%: "
+              f"{', '.join(regressions)}", file=sys.stderr)
+    return len(regressions)
+
+
 def main() -> None:
     from benchmarks import (ablation, common, cost_quality,
                             design_alternatives, forecaster_bench,
                             fused_ingest_bench, kernels_bench,
                             multi_stream_bench, offline_phase, overheads,
-                            roofline, switcher_accuracy, warehouse_bench)
+                            roofline, sharded_warehouse_bench,
+                            switcher_accuracy, warehouse_bench)
     args = list(sys.argv[1:])
-    json_out = None
-    if "--json" in args:
-        i = args.index("--json")
-        if i + 1 >= len(args):
-            sys.exit("usage: run.py [only] [--json OUT] — missing OUT path")
-        json_out = args[i + 1]
-        del args[i:i + 2]
+    json_out = compare_to = None
+    for flag in ("--json", "--compare"):
+        if flag in args:
+            i = args.index(flag)
+            if i + 1 >= len(args):
+                sys.exit(f"usage: run.py [only] [--json OUT] "
+                         f"[--compare OLD.json] — missing {flag} value")
+            if flag == "--json":
+                json_out = args[i + 1]
+            else:
+                compare_to = args[i + 1]
+            del args[i:i + 2]
     only = args[0] if args else None
 
     print("name,us_per_call,derived")
@@ -57,6 +123,7 @@ def main() -> None:
     modules = [
         ("fused_ingest", fused_ingest_bench),
         ("warehouse(Load)", warehouse_bench),
+        ("sharded_warehouse(Load)", sharded_warehouse_bench),
         ("multi_stream(AppD)", multi_stream_bench),
         ("overheads(Fig13)", overheads),
         ("offline_phase(Table3)", offline_phase),
@@ -78,15 +145,19 @@ def main() -> None:
             print(f"{name}/ERROR,0,{str(e)[:120]}")
             errors[name] = str(e)
             traceback.print_exc(file=sys.stderr)
+    snap = {row["name"]: _metric_dict(row) for row in common.records()}
+    for name, err in errors.items():
+        snap[f"{name}/ERROR"] = {"error": err}
     if json_out:
-        snap = {row["name"]: _metric_dict(row) for row in common.records()}
-        for name, err in errors.items():
-            snap[f"{name}/ERROR"] = {"error": err}
         with open(json_out, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {len(snap)} bench records to {json_out}",
               file=sys.stderr)
+    if compare_to:
+        n_regressed = _compare(snap, compare_to)
+        if n_regressed:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

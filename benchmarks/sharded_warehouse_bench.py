@@ -1,0 +1,162 @@
+"""Sharded warehouse: query scan throughput vs shard count.
+
+The partial/merge engine's point is horizontal scale: the same plan
+(Filter -> WindowAgg -> TopK) over the same rows, executed by a
+``ShardedStore`` at 1/2/4/8 shards — each shard scans its own rows in
+parallel (its own XLA CPU device) and the merge combiner reduces the
+fixed-shape partials. Reports per-shard-count scan throughput plus the
+``sharded_query_bench`` summary row: the shard-count scaling curve and
+the 8-shard speedup over the 1-shard engine.
+
+Because shard devices only exist under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (which must be
+set before jax initializes), the benchmark re-executes itself in a
+subprocess with that flag and re-emits the subprocess's CSV rows —
+``benchmarks/run.py`` and ``scripts/tier1.sh --bench-smoke`` can call
+``run()`` from an already-initialized single-device process.
+
+    PYTHONPATH=src:. python benchmarks/sharded_warehouse_bench.py [--tiny]
+
+``--tiny`` is the seconds-scale smoke configuration (correctness +
+zero-recompile assertions, no speedup floor). The full run asserts the
+8-shard engine >= 2x the 1-shard engine and exact-count / tolerant-sum
+agreement with the numpy reference.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_DEVFLAG = "--xla_force_host_platform_device_count=8"
+
+N_QUERIES = 16
+WINDOW = 500
+TOP_K = 10
+
+
+def _inner(tiny: bool) -> None:
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.warehouse import (Filter, ShardedStore, TopK, WindowAgg,
+                                 execute_ref, windows_for)
+    from repro.warehouse import query as Q
+
+    counts = (1, 8) if tiny else (1, 2, 4, 8)
+    T = 16_000 if tiny else 240_000
+    n_streams = 64                      # divisible by every shard count
+    rng = np.random.default_rng(7)
+    rows = {
+        "stream_id": (np.arange(T, dtype=np.int32) % n_streams),
+        "t": np.arange(T, dtype=np.int32),
+        "category": rng.integers(0, 4, T).astype(np.int32),
+        "k": rng.integers(0, 4, T).astype(np.int32),
+        "quality": rng.random(T).astype(np.float32),
+        "on_core_s": (rng.random(T) * 20).astype(np.float32),
+        "cloud_core_s": (rng.random(T) * 5).astype(np.float32),
+        "buffer_s": (rng.random(T) * 40).astype(np.float32),
+        "out": rng.random((T, 4)).astype(np.float32),
+    }
+
+    def plan(thr, nw):
+        return (Filter("quality", "ge", thr),
+                WindowAgg(window=WINDOW, value="quality", agg="mean",
+                          num_windows=nw),
+                TopK(TOP_K, by="quality"))
+
+    thrs = np.linspace(0.2, 0.8, N_QUERIES)
+    thr_mrows = {}
+    for S in counts:
+        # chunk = exact per-shard rows: the scan covers zero padding at
+        # every shard count, so the curve isolates the engine
+        store = ShardedStore(out_dim=4, n_shards=S, chunk_rows=T // S)
+        assert store.mesh is not None, \
+            f"need {S} devices, have {jax.device_count()}"
+        store.append_rows(rows)
+        assert store.capacity == T // S, store
+        nw = windows_for(store, WINDOW)
+        jax.block_until_ready(store.query(plan(0.5, nw)))   # warm
+        cache0 = Q.sharded_compile_cache_size()
+        best = float("inf")
+        for _ in range(1 if tiny else 3):     # best-of: CPU-quota noise
+            t0 = time.perf_counter()
+            for thr in thrs:
+                table, mask = store.query(plan(float(thr), nw))
+            jax.block_until_ready((table, mask))
+            best = min(best, time.perf_counter() - t0)
+        assert Q.sharded_compile_cache_size() == cache0, "recompiled"
+        ref, rmask = execute_ref(store.host_rows(), T,
+                                 plan(float(thrs[-1]), nw))
+        np.testing.assert_array_equal(np.asarray(table["count"]),
+                                      ref["count"])
+        np.testing.assert_allclose(np.asarray(table["quality"]),
+                                   ref["quality"], rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(mask), rmask)
+        thr_mrows[S] = N_QUERIES * T / best / 1e6
+        print(f"warehouse_sharded/query/S{S}_T{T},"
+              f"{best / N_QUERIES * 1e6:.2f},"
+              f"scan={thr_mrows[S]:.1f}Mrows/s;shards={S};recompiles=0")
+    speedup = thr_mrows[counts[-1]] / thr_mrows[1]
+    cores = os.cpu_count() or 1
+    curve = ";".join(f"s{S}={thr_mrows[S]:.1f}Mrows/s" for S in counts)
+    print(f"sharded_query_bench,{0.0:.2f},"
+          f"{curve};speedup8={speedup:.2f}x;host_cores={cores};"
+          f"rows={T};recompiles=0")
+    # the scan is compute-bound, so S shards can only beat 1 shard by
+    # min(S, physical cores): enforce the 8-shard >=2x floor where the
+    # host can physically run >=8 shard devices in parallel (an 8-core
+    # box); on smaller hosts the curve itself is the artifact (e.g. a
+    # 2-core container tops out around 2x at 4 shards / ~1.4x at 8,
+    # where 8 runtime threads thrash 2 cores)
+    if not tiny and cores >= 8:
+        assert speedup >= 2.0, \
+            f"8-shard engine must be >=2x the 1-shard engine, got " \
+            f"{speedup:.2f}x"
+
+
+def run(verbose: bool = True, tiny: bool = False):
+    """Re-exec under a forced 8-device CPU topology and re-emit the
+    subprocess's CSV rows through benchmarks.common (so --json
+    snapshots include them)."""
+    from benchmarks.common import emit
+
+    env = dict(os.environ)
+    # appended last: XLA flag parsing is last-wins, so this overrides
+    # any device count the caller's environment already pinned
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + _DEVFLAG).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), _ROOT,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    cmd = [sys.executable, os.path.abspath(__file__), "--inner"]
+    if tiny:
+        cmd.append("--tiny")
+    p = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       cwd=_ROOT)
+    if p.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench subprocess failed:\n{p.stdout[-2000:]}\n"
+            f"{p.stderr[-2000:]}")
+    out = []
+    for line in p.stdout.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3 and ("warehouse_sharded" in parts[0]
+                                or parts[0] == "sharded_query_bench"):
+            if verbose:
+                emit(parts[0], float(parts[1]), parts[2])
+            if "speedup8=" in parts[2]:
+                out.append(float(parts[2].split("speedup8=")[1]
+                                 .split("x")[0]))
+    return out
+
+
+if __name__ == "__main__":
+    if "--inner" in sys.argv[1:]:
+        _inner(tiny="--tiny" in sys.argv[1:])
+    else:
+        print("name,us_per_call,derived")
+        run(tiny="--tiny" in sys.argv[1:])

@@ -23,9 +23,19 @@ Re-running a plan with new thresholds reuses the same executable (the
 plan's VALUES are dynamic operands), older chunks spill to an
 int8-quantized cold tier, and the whole warehouse survives a process
 restart through ``checkpoint/ckpt.py``.
+
+The final section scales the Load layer HORIZONTALLY: a ``ShardedStore``
+partitions rows by stream-id hash across a device mesh and answers the
+same plans through the partial/merge engine as ONE shard_map dispatch.
+It runs on any CPU — the line below forces 4 host-platform devices
+before jax initializes, so even a laptop gets a real 4-device shard
+mesh (drop the env var to see the stacked single-device fallback).
 """
 import os
 import sys
+# must be set BEFORE jax initializes: gives a plain CPU host 4 devices
+# for the sharded-warehouse section
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
@@ -34,9 +44,10 @@ from repro.configs.workloads import COVID
 from repro.core import ingest as IG
 from repro.core.offline import fit
 from repro.data.stream import generate
-from repro.warehouse import (Filter, GroupBy, SegmentStore, TieredStore,
-                             TopK, WindowAgg, load_warehouse,
-                             save_warehouse, to_host, windows_for)
+from repro.warehouse import (Filter, GroupBy, MultiGroupBy, SegmentStore,
+                             ShardedStore, TieredStore, TopK, WindowAgg,
+                             load_warehouse, save_warehouse, to_host,
+                             windows_for)
 from repro.warehouse import query as Q
 
 
@@ -99,7 +110,48 @@ def main():
     assert np.array_equal(again["window"], cold_ans["window"])
     assert np.array_equal(again["quality"], cold_ans["quality"])
     print(f"   restored {back} from {path}; answers identical")
-    print("\nOK: ingest -> store -> query -> spill -> restore all good.")
+
+    print("\n== sharded warehouse: 4 streams hashed across 4 devices ==")
+    import jax
+    print(f"   host devices: {jax.device_count()}")
+    V = 4
+    streams = [generate(COVID, days=0.05, seed=10 + v) for v in range(V)]
+    shard_store = ShardedStore(out_dim=K, n_shards=4, chunk_rows=2048)
+    print(f"   mesh: {shard_store.mesh}"
+          if shard_store.mesh is not None
+          else "   (1 device: stacked fallback, same semantics)")
+    # the fused multi-stream engine routes every stream's trace to its
+    # owning shard device-side — ONE shard_map ingest dispatch
+    IG.run_skyscraper_multi([fitted] * V, streams, n_cores_each=8,
+                            cloud_budget_core_s=4_000.0, plan_days=0.25,
+                            sink=shard_store)
+    print(f"   {shard_store}")
+    # the same plan runs as ONE dispatch: per-shard partial kernel
+    # (masked segment_sum) + collective merge (psum) + top-k
+    nw4 = windows_for(shard_store, 150)
+    splan = (Filter("quality", "ge", 0.05),
+             WindowAgg(window=150, value="quality", agg="mean",
+                       num_windows=nw4),
+             TopK(5, by="quality", largest=False))
+    worst4 = to_host(*shard_store.query(splan))
+    for w, q in zip(worst4["window"], worst4["quality"]):
+        print(f"   window {w:4d}: mean quality {q:.3f}")
+    before = Q.sharded_compile_cache_size()
+    shard_store.query((Filter("quality", "ge", 0.5),) + splan[1:])
+    assert Q.sharded_compile_cache_size() == before, "recompiled!"
+    print("   re-query with a new threshold: 0 recompiles")
+    # multi-key GroupBy: per (window x category) mean quality, fused
+    # into one segment_sum pass
+    by_wc = to_host(*shard_store.query((
+        MultiGroupBy(keys=("t", "category"), value="quality", agg="mean",
+                     nums=(nw4, fitted.centers.shape[0]),
+                     windows=(150, 0)),
+        TopK(3, by="quality", largest=False))))
+    for w, c, q in zip(by_wc["t"], by_wc["category"], by_wc["quality"]):
+        print(f"   window {w:4d} x category {c}: mean quality {q:.3f}")
+
+    print("\nOK: ingest -> store -> query -> spill -> restore -> shard "
+          "all good.")
 
 
 if __name__ == "__main__":

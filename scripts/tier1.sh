@@ -3,9 +3,17 @@
 #
 #   scripts/tier1.sh [--bench-smoke] [extra pytest args...]
 #
-# --bench-smoke additionally runs the fused-ingest, warehouse, and
-# multi-stream benchmarks in their --tiny configurations after the
-# tests, so none of the benchmark entry points can silently rot.
+# Two legs:
+#   1. the full suite on the default (single-device) topology;
+#   2. the sharded-warehouse suite re-run under a forced 8-device host
+#      platform, where ShardedStore gets a real ('shard',) mesh and
+#      queries/ingests execute as ONE shard_map dispatch with collective
+#      merges (on one device the same tests cover the stacked fallback).
+#
+# --bench-smoke additionally runs the fused-ingest, warehouse, sharded-
+# warehouse, and multi-stream benchmarks in their --tiny configurations
+# after the tests, so none of the benchmark entry points can silently
+# rot.
 #
 # Honors an existing XLA_FLAGS; otherwise forces a single host device so
 # smoke tests see a deterministic topology (the sharding tests fork their
@@ -28,8 +36,16 @@ done
 
 python -m pytest -x -q "${args[@]+"${args[@]}"}"
 
+echo "== sharded warehouse suite on 8 forced host devices =="
+# appended last: XLA flag parsing is last-wins, so this overrides any
+# device-count already in XLA_FLAGS (e.g. CI's =1) for this leg only
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+  python -m pytest -x -q tests/test_sharded_warehouse.py \
+    tests/test_sharded_properties.py
+
 if [[ "$BENCH_SMOKE" == "1" ]]; then
-  for bench in fused_ingest_bench warehouse_bench multi_stream_bench; do
+  for bench in fused_ingest_bench warehouse_bench sharded_warehouse_bench \
+               multi_stream_bench; do
     echo "== bench smoke: ${bench} --tiny =="
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
       python "benchmarks/${bench}.py" --tiny

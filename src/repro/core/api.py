@@ -215,7 +215,9 @@ class SkyscraperPool:
     ``sink``: an optional ``warehouse.SegmentStore`` (with
     ``out_dim == len(sky.configs)``) — every tick lands one row per
     stream in the warehouse: the batched switch decision straight off
-    the device, plus the measured quality reported by the Transform.
+    the device, plus the measured quality reported by the Transform. A
+    ``warehouse.ShardedStore`` sink routes stream ``v``'s row to shard
+    ``v % n_shards`` inside the same tick dispatch.
     """
 
     def __init__(self, sky: Skyscraper, n_streams: int, sink=None):

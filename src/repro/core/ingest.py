@@ -262,11 +262,13 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
     ``online_finetune``: training inside the scan would defeat the
     point; use the windowed loop for App. E.2 experiments.
 
-    ``sink``: an optional ``warehouse.SegmentStore`` — the Load side.
-    The engine hands its still-device-resident stacked traces (plus the
-    (T, K) measured-quality vectors as the per-segment output column)
-    straight to ``sink.ingest_fused``, so ingestion -> store is zero
-    per-segment host transfers."""
+    ``sink``: an optional ``warehouse.SegmentStore`` (or
+    ``warehouse.ShardedStore``, which lands the run on the shard owning
+    ``sink_stream_id`` device-side) — the Load side. The engine hands
+    its still-device-resident stacked traces (plus the (T, K)
+    measured-quality vectors as the per-segment output column) straight
+    to ``sink.ingest_fused``, so ingestion -> store is zero per-segment
+    host transfers."""
     w = fitted.workload
     tau = w.segment_seconds
     plan_days = plan_days or fitted.horizon_segments * tau / 86400
@@ -387,7 +389,10 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
 
     ``sink``: optional ``warehouse.SegmentStore`` — all V streams'
     per-segment traces land in the store device-side (rows are
-    stream-major; stream ids start at ``sink_stream_base``).
+    stream-major; stream ids start at ``sink_stream_base``). A
+    ``warehouse.ShardedStore`` sink routes each stream's whole trace to
+    shard ``(sink_stream_base + v) % n_shards`` in the same single
+    dispatch, without gathering anything through the host.
     """
     tau = fitteds[0].workload.segment_seconds
     W = max(1, int(plan_days * 86400 / tau))

@@ -120,6 +120,21 @@ def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
 
 
+def row_sharding(mesh: Mesh, axis: str = "shard") -> NamedSharding:
+    """Leading-axis row partitioning: a leaf's first dimension split over
+    ``axis``, everything else replicated — the warehouse's stream-hash
+    shard layout for its stacked (n_shards, cap, ...) columns."""
+    return NamedSharding(mesh, P(axis))
+
+
+def put_row_sharded(tree, mesh: Mesh, axis: str = "shard"):
+    """device_put every leaf of ``tree`` with its leading axis
+    partitioned over ``axis`` (see ``row_sharding``). Used by
+    ``warehouse.ShardedStore`` to land columns on the shard mesh."""
+    sh = row_sharding(mesh, axis)
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
 # ---------------------------------------------------------------------------
 # Param metadata: single source of truth for shape/dtype/init/logical axes.
 # ---------------------------------------------------------------------------

@@ -1,14 +1,17 @@
 """V-ETL Load subsystem: device-resident columnar warehouse + compiled
-query engine + hot/cold tiering (see store.py / query.py / tiers.py)."""
-from repro.warehouse.query import (Filter, GroupBy, Project, TopK,
-                                   WindowAgg, execute, execute_ref,
-                                   to_host, windows_for)
-from repro.warehouse.store import SegmentStore
-from repro.warehouse.tiers import (TieredStore, load_warehouse,
-                                   save_warehouse)
+partial/merge query engine + hot/cold tiering, single-device or
+stream-hash sharded across a device mesh (see store.py / query.py /
+tiers.py)."""
+from repro.warehouse.query import (Filter, GroupBy, MultiGroupBy, Project,
+                                   TopK, WindowAgg, execute, execute_ref,
+                                   execute_sharded, to_host, windows_for)
+from repro.warehouse.store import SegmentStore, ShardedStore
+from repro.warehouse.tiers import (ShardedTieredStore, TieredStore,
+                                   load_warehouse, save_warehouse)
 
 __all__ = [
-    "SegmentStore", "TieredStore", "Filter", "Project", "GroupBy",
-    "WindowAgg", "TopK", "execute", "execute_ref", "to_host",
+    "SegmentStore", "ShardedStore", "TieredStore", "ShardedTieredStore",
+    "Filter", "Project", "GroupBy", "WindowAgg", "MultiGroupBy", "TopK",
+    "execute", "execute_sharded", "execute_ref", "to_host",
     "windows_for", "save_warehouse", "load_warehouse",
 ]

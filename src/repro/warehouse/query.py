@@ -6,14 +6,33 @@ A query is a tuple of plan nodes applied left to right:
     Project(columns)            keep only the named columns
     GroupBy(key, value, agg)    segment_sum/-max aggregation per key id
     WindowAgg(window, value)    same, keyed by time window t // window
+    MultiGroupBy(keys, value)   multi-key aggregation (e.g. window x
+                                category) via fused key encoding into
+                                ONE segment_sum pass
     TopK(k, by)                 lax.top_k over a (possibly aggregated)
                                 column; gathers every surviving column
+
+Execution model: every plan is a two-phase **partial / merge** program.
+The *partial* phase runs row-local work (filter masks, projections) and
+reduces its rows to a fixed-shape, mergeable partial — masked
+segment_sum accumulators for aggregations, a local top-k candidate
+block for TopK, the masked rows themselves for pure row plans. The
+*merge* phase combines partials (sum / max / concat), finalizes
+(mean division, empty-group replacement), and runs any post-reduction
+nodes. The single-device engine is the trivial 1-shard case of this
+model — partial + identity merge, bit-exact with the pre-refactor
+kernel — and the SAME partial/merge functions execute sharded:
+``execute_sharded`` runs ONE ``shard_map`` dispatch over a
+``ShardedStore``'s device mesh (psum/pmax/all_gather merge; optionally
+int8-compressed partial sums for wide embedding columns, reusing
+``distribution.compression``), or, below the device count, the same
+kernels vmapped over a stacked shard axis on one device.
 
 The whole plan compiles to ONE jitted kernel per *plan shape*: filter
 predicates are vmapped masks whose threshold VALUES are dynamic
 operands (re-querying with a new threshold, or after more rows arrive
 within the same chunk capacity, reuses the executable — assert it via
-``compile_cache_size()`` / the registered ``warehouse_query`` probe).
+``compile_cache_size()`` / the registered ``warehouse_query`` probes).
 Aggregations use ``jax.ops.segment_sum`` with static group counts, so
 no data-dependent shapes ever materialize; filtered-out and padding
 rows participate as exact no-ops (weight 0 / -inf).
@@ -22,7 +41,9 @@ rows participate as exact no-ops (weight 0 / -inf).
 validity mask over its rows (top-k slots beyond the number of matching
 groups are masked off). ``execute_ref`` is the plain-numpy reference
 implementation used by tests and the benchmark baseline; it replicates
-the kernel's row-order summation so fp32 results match exactly.
+the kernel's row-order summation so fp32 results match exactly on a
+single shard (multi-shard float sums regroup the addition and match to
+tolerance; counts and integer-valued sums stay exact).
 """
 from __future__ import annotations
 
@@ -34,8 +55,11 @@ from typing import Dict, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.switcher import register_cache_probe
+from repro.distribution.compression import compressed_psum, quantize_int8
 
 
 @dataclass(frozen=True)
@@ -67,13 +91,35 @@ class WindowAgg:
 
 
 @dataclass(frozen=True)
+class MultiGroupBy:
+    """Aggregate by SEVERAL integer keys at once (e.g. time window x
+    content category) with the key tuple fused into one flat id, so the
+    whole multi-key aggregation is still ONE segment_sum pass.
+
+    ``nums[i]`` is the static id count of ``keys[i]`` (ids clip into
+    [0, nums[i]) after windowing); ``windows[i] > 1`` divides that key's
+    column first (``keys[i] == "t", windows[i] == W`` reproduces
+    WindowAgg's time windows). The result table has one decoded id
+    column per key plus the aggregated value and ``count``."""
+    keys: Tuple[str, ...]
+    value: str
+    agg: str = "sum"
+    nums: Tuple[int, ...] = ()
+    windows: Tuple[int, ...] = ()    # optional, same length as keys
+
+
+@dataclass(frozen=True)
 class TopK:
     k: int
     by: str
     largest: bool = True
 
 
-PlanNode = Union[Filter, Project, GroupBy, WindowAgg, TopK]
+PlanNode = Union[Filter, Project, GroupBy, WindowAgg, MultiGroupBy, TopK]
+
+# nodes that reduce rows to a fixed-shape mergeable partial — a sharded
+# plan splits at the FIRST of these
+_REDUCERS = (GroupBy, WindowAgg, MultiGroupBy, TopK)
 
 
 @dataclass(frozen=True)
@@ -143,52 +189,120 @@ def normalize(plan):
             floors.append(np.int32(fl))
             isint.append(math.isfinite(v) and v == fl)
         else:
+            if isinstance(node, MultiGroupBy):
+                assert len(node.keys) >= 1 and \
+                    len(node.nums) == len(node.keys), \
+                    "MultiGroupBy needs one static id count per key"
+                assert not node.windows or \
+                    len(node.windows) == len(node.keys), \
+                    "MultiGroupBy windows must match keys"
             spec.append(node)
     return tuple(spec), (jnp.asarray(np.asarray(vals, np.float32)),
                          jnp.asarray(np.asarray(floors, np.int32)),
                          jnp.asarray(np.asarray(isint, bool)))
 
 
-def _aggregate(table, mask, ids, num, value, agg):
-    """Masked segment aggregation with a static group count."""
-    v = table[value].astype(jnp.float32)
-    ids = jnp.clip(ids.astype(jnp.int32), 0, num - 1)
-    if agg in ("sum", "mean", "count"):
-        # value and count share ONE scatter pass (the scatter is the
-        # whole cost of the kernel on CPU); per-column addition order
-        # is unchanged, so results still match the numpy reference
-        # bit-exact
-        both = jax.ops.segment_sum(
-            jnp.stack([jnp.where(mask, v, 0.0),
-                       mask.astype(jnp.float32)], axis=1),
-            ids, num_segments=num)
-        out, cnt = both[:, 0], both[:, 1]
-        if agg == "mean":
-            out = out / jnp.maximum(cnt, 1.0)
-        elif agg == "count":
-            out = cnt
-        return out, cnt
+# ---------------------------------------------------------------------------
+# segment aggregation as partial -> finalize (the mergeable core)
+# ---------------------------------------------------------------------------
+
+def _seg_ids(table, node):
+    """Clipped int32 group ids + static group count for an agg node."""
+    if isinstance(node, GroupBy):
+        ids, num = table[node.key], node.num_groups
+    elif isinstance(node, WindowAgg):
+        ids, num = table["t"] // node.window, node.num_windows
+    else:                                            # MultiGroupBy
+        wins = node.windows or (0,) * len(node.keys)
+        fused = None
+        for key, n, w in zip(node.keys, node.nums, wins):
+            ids = table[key].astype(jnp.int32)
+            if w and w > 1:
+                ids = ids // w
+            ids = jnp.clip(ids, 0, n - 1)
+            # fused encoding: ONE scatter pass covers the key tuple
+            fused = ids if fused is None else fused * n + ids
+        return fused, math.prod(node.nums)
+    return jnp.clip(ids.astype(jnp.int32), 0, num - 1), num
+
+
+def _seg_partial(table, mask, node):
+    """Masked segment accumulators — the per-shard PARTIAL of an agg
+    node: {"acc", "cnt"}, fixed (num_groups,[D]) shapes, mergeable by
+    sum (sum/mean/count) or max/min. Filtered rows are exact no-ops."""
+    ids, num = _seg_ids(table, node)
+    v = table[node.value].astype(jnp.float32)
+    if node.agg in ("sum", "mean", "count"):
+        if v.ndim == 1:
+            # value and count share ONE scatter pass (the scatter is the
+            # whole cost of the kernel on CPU); per-column addition
+            # order is unchanged, so single-shard results still match
+            # the numpy reference bit-exact
+            both = jax.ops.segment_sum(
+                jnp.stack([jnp.where(mask, v, 0.0),
+                           mask.astype(jnp.float32)], axis=1),
+                ids, num_segments=num)
+            return {"acc": both[:, 0], "cnt": both[:, 1]}
+        # wide (row, D) value columns (the `out` embedding): plain
+        # masked segment_sum per lane
+        acc = jax.ops.segment_sum(jnp.where(mask[:, None], v, 0.0), ids,
+                                  num_segments=num)
+        cnt = jax.ops.segment_sum(mask.astype(jnp.float32), ids,
+                                  num_segments=num)
+        return {"acc": acc, "cnt": cnt}
+    assert v.ndim == 1, f"agg {node.agg!r} needs a scalar column"
     cnt = jax.ops.segment_sum(mask.astype(jnp.float32), ids,
                               num_segments=num)
-    if agg == "max":
-        out = jax.ops.segment_max(jnp.where(mask, v, -jnp.inf), ids,
+    if node.agg == "max":
+        acc = jax.ops.segment_max(jnp.where(mask, v, -jnp.inf), ids,
                                   num_segments=num)
-        out = jnp.where(cnt > 0, out, 0.0)
-    elif agg == "min":
-        out = jax.ops.segment_min(jnp.where(mask, v, jnp.inf), ids,
+    elif node.agg == "min":
+        acc = jax.ops.segment_min(jnp.where(mask, v, jnp.inf), ids,
                                   num_segments=num)
-        out = jnp.where(cnt > 0, out, 0.0)
     else:
-        raise ValueError(f"unknown agg {agg!r}")
+        raise ValueError(f"unknown agg {node.agg!r}")
+    return {"acc": acc, "cnt": cnt}
+
+
+def _seg_finalize(acc, cnt, agg):
+    """Merged accumulators -> the agg's answer (pure; shared verbatim by
+    the 1-shard and sharded paths, so they cannot drift)."""
+    if agg == "mean":
+        c = jnp.maximum(cnt, 1.0)
+        out = acc / (c if acc.ndim == cnt.ndim else c[:, None])
+    elif agg == "count":
+        out = cnt
+    elif agg in ("max", "min"):
+        out = jnp.where(cnt > 0, acc, 0.0)
+    else:
+        out = acc
     return out, cnt
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def _run_plan(cols, n_rows, fvals, *, spec):
-    cap = cols["t"].shape[0] if "t" in cols else \
-        next(iter(cols.values())).shape[0]
-    mask = jnp.arange(cap) < n_rows
-    table = cols
+def _seg_table(node, out, cnt):
+    """Result table + mask for a finalized aggregation."""
+    if isinstance(node, GroupBy):
+        table = {node.key: jnp.arange(node.num_groups, dtype=jnp.int32)}
+    elif isinstance(node, WindowAgg):
+        table = {"window": jnp.arange(node.num_windows, dtype=jnp.int32)}
+    else:                                            # MultiGroupBy
+        num = math.prod(node.nums)
+        rem = jnp.arange(num, dtype=jnp.int32)
+        decoded = {}
+        for key, n in zip(reversed(node.keys), reversed(node.nums)):
+            decoded[key] = rem % n
+            rem = rem // n
+        table = {k: decoded[k] for k in node.keys}
+    table[node.value] = out
+    table["count"] = cnt
+    return table, cnt > 0
+
+
+def _apply_nodes(table, mask, fvals, spec):
+    """Run plan nodes left-to-right on a (replicated) table — row-local
+    nodes plus full (partial + trivially-merged) reductions. This IS the
+    single-device engine, and the sharded engine reuses it for the
+    pre-reduction and post-merge phases."""
     for node in spec:
         if isinstance(node, _FilterRef):
             vals, floors, isint = fvals
@@ -204,19 +318,10 @@ def _run_plan(cols, n_rows, fvals, *, spec):
             mask = mask & pred
         elif isinstance(node, Project):
             table = {c: table[c] for c in node.columns}
-        elif isinstance(node, GroupBy):
-            out, cnt = _aggregate(table, mask, table[node.key],
-                                  node.num_groups, node.value, node.agg)
-            table = {node.key: jnp.arange(node.num_groups, dtype=jnp.int32),
-                     node.value: out, "count": cnt}
-            mask = cnt > 0
-        elif isinstance(node, WindowAgg):
-            out, cnt = _aggregate(table, mask, table["t"] // node.window,
-                                  node.num_windows, node.value, node.agg)
-            table = {"window": jnp.arange(node.num_windows,
-                                          dtype=jnp.int32),
-                     node.value: out, "count": cnt}
-            mask = cnt > 0
+        elif isinstance(node, (GroupBy, WindowAgg, MultiGroupBy)):
+            part = _seg_partial(table, mask, node)
+            out, cnt = _seg_finalize(part["acc"], part["cnt"], node.agg)
+            table, mask = _seg_table(node, out, cnt)
         elif isinstance(node, TopK):
             score = jnp.where(mask, table[node.by].astype(jnp.float32),
                               -jnp.inf)
@@ -232,14 +337,220 @@ def _run_plan(cols, n_rows, fvals, *, spec):
     return table, mask
 
 
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _run_plan(cols, n_rows, fvals, *, spec):
+    cap = cols["t"].shape[0] if "t" in cols else \
+        next(iter(cols.values())).shape[0]
+    mask = jnp.arange(cap) < n_rows
+    return _apply_nodes(cols, mask, fvals, spec)
+
+
 register_cache_probe("warehouse_query", lambda: _run_plan._cache_size())
 
 
 def compile_cache_size() -> int:
-    """jit cache entries of the query kernel: one per distinct plan
-    shape x store capacity — stable across repeated queries (changed
-    filter values, appended rows within the same chunk capacity)."""
+    """jit cache entries of the single-device query kernel: one per
+    distinct plan shape x store capacity — stable across repeated
+    queries (changed filter values, appended rows within the same chunk
+    capacity)."""
     return _run_plan._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# sharded execution: per-shard partial kernel + merge combiner
+# ---------------------------------------------------------------------------
+
+def split_plan(spec):
+    """(pre, reduce_node, post): the partial phase runs ``pre`` (row-
+    local Filter/Project) plus the first reducing node's accumulators;
+    the merge phase combines partials and runs ``post`` on the merged,
+    replicated table."""
+    for i, node in enumerate(spec):
+        if isinstance(node, _REDUCERS):
+            return spec[:i], node, spec[i + 1:]
+    return spec, None, ()
+
+
+class _CollectiveCombine:
+    """Merge primitives inside shard_map: collectives over the mesh's
+    'shard' axis."""
+    collective = True
+
+    def __init__(self, axis: str, n: int):
+        self.axis, self.n = axis, n
+
+    def sum(self, x):
+        return jax.lax.psum(x, self.axis)
+
+    def max(self, x):
+        return jax.lax.pmax(x, self.axis)
+
+    def min(self, x):
+        return jax.lax.pmin(x, self.axis)
+
+    def concat(self, x):
+        return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
+
+
+class _StackedCombine:
+    """Merge primitives for the single-device fallback: partial leaves
+    carry a leading (n_shards,) axis (vmapped partial kernel) and merge
+    by axis-0 reduction — the same algebra, no collectives."""
+    collective = False
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def sum(self, x):
+        return x.sum(axis=0)
+
+    def max(self, x):
+        return x.max(axis=0)
+
+    def min(self, x):
+        return x.min(axis=0)
+
+    def concat(self, x):
+        return x.reshape((-1,) + x.shape[2:])
+
+
+def _compressed_sum(acc, combine, key):
+    """Merge float partial sums through int8 quantization (per-shard
+    scale + stochastic rounding) — 4x fewer bytes on the cross-shard
+    hop, for wide embedding-column accumulators. The collective path
+    reuses ``distribution.compression.compressed_psum`` (x n to undo its
+    mean); the stacked path mirrors its math (sum of int8 codes times
+    the mean scale) so both modes share semantics."""
+    if combine.collective:
+        k = jax.random.fold_in(key, jax.lax.axis_index(combine.axis))
+        mean, _ = compressed_psum(acc, combine.axis, k,
+                                  jnp.zeros_like(acc))
+        return mean * combine.n
+    keys = jax.random.split(key, acc.shape[0])
+    q, scale = jax.vmap(quantize_int8)(acc, keys)
+    total = q.astype(jnp.int32).sum(axis=0).astype(jnp.float32)
+    return total * (scale.sum() / combine.n)
+
+
+def _shard_partial(cols, n_valid, fvals, shard_id, *, pre, node):
+    """ONE shard's partial: row-local pre nodes, then the reduce node's
+    fixed-shape mergeable accumulators (or the masked rows themselves
+    for pure row plans)."""
+    cap = next(iter(cols.values())).shape[0]
+    mask = jnp.arange(cap) < n_valid
+    table, mask = _apply_nodes(cols, mask, fvals, pre)
+    if node is None:
+        return {"table": table, "mask": mask}
+    if isinstance(node, TopK):
+        # local candidates: the global top-k is a subset of the union of
+        # per-shard top-k blocks, so k survivors per shard suffice
+        score = jnp.where(mask, table[node.by].astype(jnp.float32),
+                          -jnp.inf)
+        if not node.largest:
+            score = jnp.where(jnp.isfinite(score), -score, score)
+        kk = min(node.k, int(score.shape[0]))
+        top, idx = jax.lax.top_k(score, kk)
+        cand = {c: jnp.take(table[c], idx, axis=0) for c in table}
+        cand["index"] = idx + shard_id * cap       # global row id
+        return {"table": cand, "score": top}
+    return _seg_partial(table, mask, node)
+
+
+def _merge_partials(part, node, post, fvals, combine, key, compressed):
+    """Pure merge combiner: cross-shard reduction of the partial, agg
+    finalization, then the post-reduction plan nodes on the (now
+    replicated) merged table."""
+    if node is None:                                  # pure row plan
+        table = {k: combine.concat(v) for k, v in part["table"].items()}
+        return table, combine.concat(part["mask"])
+    if isinstance(node, TopK):
+        score = combine.concat(part["score"])
+        cand = {c: combine.concat(v) for c, v in part["table"].items()}
+        kk = min(node.k, int(score.shape[0]))
+        top, idx = jax.lax.top_k(score, kk)
+        table = {c: jnp.take(v, idx, axis=0) for c, v in cand.items()}
+        mask = jnp.isfinite(top)
+    else:
+        acc, cnt = part["acc"], part["cnt"]
+        if node.agg == "max":
+            acc = combine.max(acc)
+        elif node.agg == "min":
+            acc = combine.min(acc)
+        elif compressed and acc.dtype == jnp.float32:
+            acc = _compressed_sum(acc, combine, key)
+        else:
+            acc = combine.sum(acc)
+        cnt = combine.sum(cnt)                        # counts stay exact
+        out, cnt = _seg_finalize(acc, cnt, node.agg)
+        table, mask = _seg_table(node, out, cnt)
+    return _apply_nodes(table, mask, fvals, post)
+
+
+# (mesh, n_shards) -> jitted sharded kernel; a plain dict (not
+# lru_cache) so the cache probe can sum executable counts across them
+_SHARDED_KERNELS: Dict = {}
+
+
+def _sharded_kernel(mesh, n_shards: int):
+    kern = _SHARDED_KERNELS.get((mesh, n_shards))
+    if kern is not None:
+        return kern
+
+    @functools.partial(jax.jit, static_argnames=("spec", "compressed"))
+    def run(cols, n_valid, fvals, key, *, spec, compressed):
+        pre, node, post = split_plan(spec)
+        if mesh is None:
+            # single-device fallback: vmap the SAME partial kernel over
+            # the stacked shard axis, merge by axis-0 reduction
+            sids = jnp.arange(n_shards, dtype=jnp.int32)
+            part = jax.vmap(lambda c, n, s: _shard_partial(
+                c, n, fvals, s, pre=pre, node=node))(cols, n_valid, sids)
+            return _merge_partials(part, node, post, fvals,
+                                   _StackedCombine(n_shards), key,
+                                   compressed)
+
+        def body(c, n, fv, k):
+            sid = jax.lax.axis_index("shard")
+            part = _shard_partial({name: v[0] for name, v in c.items()},
+                                  n[0], fv, sid, pre=pre, node=node)
+            return _merge_partials(part, node, post, fv,
+                                   _CollectiveCombine("shard", n_shards),
+                                   k, compressed)
+
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P("shard"), P("shard"), P(), P()),
+                         out_specs=P(), check_rep=False)(
+                             cols, n_valid, fvals, key)
+
+    _SHARDED_KERNELS[(mesh, n_shards)] = run
+    return run
+
+
+def sharded_compile_cache_size() -> int:
+    """jit cache entries across every sharded query kernel: one per
+    (plan shape x shard capacity) per (mesh, shard count) — stable
+    across repeated queries at a fixed shard count."""
+    return sum(k._cache_size() for k in _SHARDED_KERNELS.values())
+
+
+register_cache_probe("warehouse_query_sharded", sharded_compile_cache_size)
+
+
+def execute_sharded(store, plan, *, compressed: bool = False, key=None):
+    """Run ``plan`` over a sharded store as ONE dispatch: the per-shard
+    partial kernel through ``shard_map`` on the store's device mesh
+    followed by the pure merge combiner (psum / pmax / all-gather), or
+    the vmapped stacked equivalent when the host lacks the devices.
+    ``compressed=True`` merges float partial sums through int8
+    quantization (see ``_compressed_sum``) — exact counts, lossy sums.
+    Returns ``(table, mask)`` of replicated device arrays."""
+    cols, n_valid = store.shard_source()
+    spec, fvals = normalize(plan)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    kern = _sharded_kernel(store.mesh, store.n_shards)
+    return kern(cols, n_valid, fvals, key, spec=spec,
+                compressed=bool(compressed))
 
 
 def _source(store):
@@ -255,7 +566,10 @@ def _source(store):
 
 def execute(store, plan):
     """Run ``plan`` over ``store`` as one compiled dispatch; returns
-    ``(table, mask)`` of device arrays."""
+    ``(table, mask)`` of device arrays. Sharded stores route to
+    ``execute_sharded``."""
+    if hasattr(store, "shard_source"):
+        return execute_sharded(store, plan)
     cols, n_rows = _source(store)
     spec, fvals = normalize(plan)
     return _run_plan(cols, jnp.int32(n_rows), fvals, spec=spec)
@@ -277,31 +591,72 @@ def to_host(table, mask) -> Dict[str, np.ndarray]:
 # numpy reference (tests + benchmark correctness baseline)
 # ---------------------------------------------------------------------------
 
-def _np_aggregate(table, mask, ids, num, value, agg):
-    v = np.asarray(table[value], np.float32)
-    ids = np.clip(np.asarray(ids, np.int64), 0, num - 1)
+def _np_seg_ids(table, node):
+    if isinstance(node, GroupBy):
+        ids, num = table[node.key], node.num_groups
+    elif isinstance(node, WindowAgg):
+        ids, num = table["t"] // node.window, node.num_windows
+    else:                                            # MultiGroupBy
+        wins = node.windows or (0,) * len(node.keys)
+        fused = None
+        for key, n, w in zip(node.keys, node.nums, wins):
+            ids = np.asarray(table[key], np.int64)
+            if w and w > 1:
+                ids = ids // w
+            ids = np.clip(ids, 0, n - 1)
+            fused = ids if fused is None else fused * n + ids
+        return fused, math.prod(node.nums)
+    return np.clip(np.asarray(ids, np.int64), 0, num - 1), num
+
+
+def _np_aggregate(table, mask, node):
+    ids, num = _np_seg_ids(table, node)
+    v = np.asarray(table[node.value], np.float32)
+    agg = node.agg
     cnt = np.zeros(num, np.float32)
     np.add.at(cnt, ids[mask], np.float32(1.0))
     if agg == "count":
         out = cnt
     elif agg in ("sum", "mean"):
-        out = np.zeros(num, np.float32)
+        out = np.zeros((num,) + v.shape[1:], np.float32)
         # np.add.at accumulates in row order — the same fp32 addition
-        # sequence as the kernel's segment_sum, so sums match bit-exact
+        # sequence as the kernel's segment_sum, so single-shard sums
+        # match bit-exact
         np.add.at(out, ids[mask], v[mask])
         if agg == "mean":
-            out = out / np.maximum(cnt, 1.0)
+            c = np.maximum(cnt, 1.0)
+            out = out / (c if out.ndim == 1 else c[:, None])
     elif agg == "max":
+        assert v.ndim == 1, "max needs a scalar column"
         out = np.full(num, -np.inf, np.float32)
         np.maximum.at(out, ids[mask], v[mask])
         out = np.where(cnt > 0, out, 0.0).astype(np.float32)
     elif agg == "min":
+        assert v.ndim == 1, "min needs a scalar column"
         out = np.full(num, np.inf, np.float32)
         np.minimum.at(out, ids[mask], v[mask])
         out = np.where(cnt > 0, out, 0.0).astype(np.float32)
     else:
         raise ValueError(agg)
     return out, cnt
+
+
+def _np_seg_table(node, out, cnt):
+    if isinstance(node, GroupBy):
+        table = {node.key: np.arange(node.num_groups, dtype=np.int32)}
+    elif isinstance(node, WindowAgg):
+        table = {"window": np.arange(node.num_windows, dtype=np.int32)}
+    else:
+        num = math.prod(node.nums)
+        rem = np.arange(num, dtype=np.int64)
+        decoded = {}
+        for key, n in zip(reversed(node.keys), reversed(node.nums)):
+            decoded[key] = (rem % n).astype(np.int32)
+            rem = rem // n
+        table = {k: decoded[k] for k in node.keys}
+    table[node.value] = out
+    table["count"] = cnt
+    return table, cnt > 0
 
 
 def execute_ref(cols: Dict[str, np.ndarray], n_rows: int, plan):
@@ -323,18 +678,9 @@ def execute_ref(cols: Dict[str, np.ndarray], n_rows: int, plan):
                                             np.float32(node.value))
         elif isinstance(node, Project):
             table = {c: table[c] for c in node.columns}
-        elif isinstance(node, GroupBy):
-            out, cnt = _np_aggregate(table, mask, table[node.key],
-                                     node.num_groups, node.value, node.agg)
-            table = {node.key: np.arange(node.num_groups, dtype=np.int32),
-                     node.value: out, "count": cnt}
-            mask = cnt > 0
-        elif isinstance(node, WindowAgg):
-            out, cnt = _np_aggregate(table, mask, table["t"] // node.window,
-                                     node.num_windows, node.value, node.agg)
-            table = {"window": np.arange(node.num_windows, dtype=np.int32),
-                     node.value: out, "count": cnt}
-            mask = cnt > 0
+        elif isinstance(node, (GroupBy, WindowAgg, MultiGroupBy)):
+            out, cnt = _np_aggregate(table, mask, node)
+            table, mask = _np_seg_table(node, out, cnt)
         elif isinstance(node, TopK):
             score = np.where(mask, table[node.by].astype(np.float32),
                              -np.inf)

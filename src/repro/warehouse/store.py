@@ -32,6 +32,18 @@ from a serving-pool tick.
 The store is a registered JAX pytree (columns are leaves; row count and
 chunking are static aux), so it passes through jit/vmap and flattens
 for checkpointing (see ``warehouse.tiers``).
+
+``ShardedStore`` is the horizontal scale-out of the same layout: rows
+partition by ``stream_id % n_shards`` onto a 1-D ``('shard',)`` device
+mesh, columns are stacked ``(n_shards, cap, ...)`` arrays whose leading
+axis is split across devices, and every ingest runs as ONE ``shard_map``
+dispatch — each shard scatters exactly the rows it owns (a masked
+cumulative-rank scatter; non-owned rows land out of bounds and are
+dropped), so routing never gathers through the host. Queries execute
+through the partial/merge engine (``warehouse.query.execute_sharded``).
+With fewer devices than shards the same kernels run vmapped over the
+stacked axis on one device, so all sharding semantics stay testable
+anywhere.
 """
 from __future__ import annotations
 
@@ -41,8 +53,12 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.switcher import register_cache_probe
+from repro.distribution.sharding import put_row_sharded
+from repro.launch.mesh import make_shard_mesh
 
 SCALAR_COLUMNS = (
     ("stream_id", jnp.int32),
@@ -264,3 +280,271 @@ register_cache_probe(
     lambda: (_scatter._cache_size() + _ingest_fused._cache_size()
              + _ingest_fused_multi._cache_size()
              + _ingest_tick._cache_size()))
+
+
+# ---------------------------------------------------------------------------
+# sharded store: stream-hash partitioned rows across a device mesh
+# ---------------------------------------------------------------------------
+
+def _route_write(cols, n_rows, upd, owner, shard_id):
+    """ONE shard's slice of a routed append. Rows whose ``owner`` equals
+    ``shard_id`` scatter at consecutive positions starting at this
+    shard's ``n_rows`` offset (rank = exclusive cumsum of the ownership
+    mask); every other row's index points past the capacity and the
+    scatter drops it — so all shards run the identical fixed-shape
+    program on the identical replicated update block, and each keeps
+    exactly its own rows. No host gathers, no data-dependent shapes."""
+    cap = next(iter(cols.values())).shape[0]
+    own = owner == shard_id
+    rank = jnp.cumsum(own.astype(jnp.int32)) - 1
+    idx = jnp.where(own, n_rows + rank, cap)
+    new = {k: cols[k].at[idx].set(upd[k].astype(cols[k].dtype),
+                                  mode="drop") for k in cols}
+    return new, n_rows + own.sum(dtype=jnp.int32)
+
+
+def _append_traced(cols, n_rows, upd, mesh, n_shards):
+    """Routed append over all shards: shard_map on the mesh (one
+    collective-free dispatch, each device writes its own block) or the
+    vmapped stacked fallback. ``upd`` maps every column to an (n, ...)
+    replicated update block; ownership is ``stream_id % n_shards``."""
+    owner = upd["stream_id"].astype(jnp.int32) % n_shards
+    if mesh is None:
+        sids = jnp.arange(n_shards, dtype=jnp.int32)
+        return jax.vmap(lambda c, nr, s: _route_write(c, nr, upd, owner,
+                                                      s))(cols, n_rows,
+                                                          sids)
+
+    def body(c, nr, u, ow):
+        new, n = _route_write({k: v[0] for k, v in c.items()}, nr[0], u,
+                              ow, jax.lax.axis_index("shard"))
+        return {k: v[None] for k, v in new.items()}, n[None]
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P("shard"), P("shard"), P(), P()),
+                     out_specs=(P("shard"), P("shard")),
+                     check_rep=False)(cols, n_rows, upd, owner)
+
+
+# (kind, mesh, n_shards) -> jitted kernel; plain dict so the cache probe
+# can sum executable counts
+_SHARD_KERNELS: Dict = {}
+
+
+def _shard_kernel(kind: str, mesh, n_shards: int):
+    key = (kind, mesh, n_shards)
+    kern = _SHARD_KERNELS.get(key)
+    if kern is not None:
+        return kern
+    if kind == "append":
+        @jax.jit
+        def kern(cols, n_rows, upd):
+            return _append_traced(cols, n_rows, upd, mesh, n_shards)
+    elif kind == "fused_multi":
+        @functools.partial(jax.jit, static_argnames=("T",))
+        def kern(cols, n_rows, traces, out_vecs, stream_base, t0, *, T):
+            V = out_vecs.shape[0]
+
+            def flat(x):                      # (n_w, V, W) -> (V*T,)
+                return jnp.swapaxes(x, 0, 1).reshape(V, -1)[:, :T] \
+                    .reshape(-1)
+
+            upd = {dst: flat(traces[src]) for src, dst in _RUN_KEYS}
+            upd["stream_id"] = (stream_base
+                                + jnp.repeat(jnp.arange(V, dtype=jnp.int32),
+                                             T))
+            upd["t"] = t0 + jnp.tile(jnp.arange(T, dtype=jnp.int32), V)
+            upd[OUT_COLUMN] = out_vecs.reshape(V * T, -1)
+            return _append_traced(cols, n_rows, upd, mesh, n_shards)
+    elif kind == "tick":
+        @jax.jit
+        def kern(cols, n_rows, traces, quality, out_vecs, t):
+            V = quality.shape[0]
+            upd = {dst: traces[src] for src, dst in _RUN_KEYS}
+            upd["quality"] = quality
+            upd["stream_id"] = jnp.arange(V, dtype=jnp.int32)
+            upd["t"] = jnp.full((V,), t, jnp.int32)
+            upd[OUT_COLUMN] = out_vecs
+            return _append_traced(cols, n_rows, upd, mesh, n_shards)
+    else:
+        raise ValueError(kind)
+    _SHARD_KERNELS[key] = kern
+    return kern
+
+
+register_cache_probe(
+    "warehouse_append_sharded",
+    lambda: sum(k._cache_size() for k in _SHARD_KERNELS.values()))
+
+
+class ShardedStore:
+    """Stream-hash partitioned ``SegmentStore`` across a device mesh.
+
+    Columns are stacked ``(n_shards, cap, ...)`` device arrays with the
+    leading axis split over a 1-D ``'shard'`` mesh (one shard per
+    device, see ``launch.mesh.make_shard_mesh``); row ``r`` of stream
+    ``s`` lives on shard ``s % n_shards``. Every ingest path
+    (``ingest_fused`` / ``ingest_fused_multi`` / ``ingest_tick`` /
+    ``append_rows``) is ONE jitted shard_map dispatch that routes each
+    row to its owning shard device-side, and ``query`` executes plans
+    through the partial/merge engine as ONE shard_map dispatch of the
+    per-shard partial kernel plus a collective merge. On hosts with
+    fewer devices than shards the identical kernels run vmapped over
+    the stacked axis (``mesh is None``) — same semantics, one device.
+
+    Host-side bookkeeping (per-shard row counts, ``t_max``) is computed
+    from ingest METADATA (stream ids and row counts the caller already
+    knows) — the data itself never round-trips."""
+
+    def __init__(self, out_dim: int, n_shards: int,
+                 chunk_rows: int = 8192, mesh="auto"):
+        assert out_dim >= 1 and n_shards >= 1 and chunk_rows >= 1
+        self.out_dim = int(out_dim)
+        self.n_shards = int(n_shards)
+        self.chunk_rows = int(chunk_rows)
+        self.mesh = make_shard_mesh(n_shards) if mesh == "auto" else mesh
+        self.t_max = -1
+        self.n_rows_by_shard = np.zeros(self.n_shards, np.int64)
+        self.columns = self._put(self._empty(0))
+        self.n_rows_dev = self._put(jnp.zeros((self.n_shards,), jnp.int32))
+
+    def _put(self, tree):
+        return put_row_sharded(tree, self.mesh) if self.mesh is not None \
+            else tree
+
+    def _empty(self, cap: int) -> Dict[str, jnp.ndarray]:
+        cols = {n: jnp.zeros((self.n_shards, cap), dt)
+                for n, dt in SCALAR_COLUMNS}
+        cols[OUT_COLUMN] = jnp.zeros((self.n_shards, cap, self.out_dim),
+                                     jnp.float32)
+        return cols
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Per-shard row capacity."""
+        return self.columns["t"].shape[1]
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.n_rows_by_shard.sum())
+
+    def _reserve(self, incoming_by_shard: np.ndarray) -> None:
+        """Grow every shard's capacity (uniformly, chunk-aligned,
+        geometric) to fit the incoming per-shard row counts."""
+        need = int((self.n_rows_by_shard + incoming_by_shard).max())
+        if need <= self.capacity:
+            return
+        cap = -(-max(need, 2 * self.capacity)
+                // self.chunk_rows) * self.chunk_rows
+        pad = cap - self.capacity
+        grown = {k: jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+                 for k, v in self.columns.items()}
+        self.columns = self._put(grown)
+
+    # -- ingestion -----------------------------------------------------
+    def _owner_counts(self, stream_ids) -> np.ndarray:
+        return np.bincount(np.asarray(stream_ids, np.int64)
+                           % self.n_shards, minlength=self.n_shards)
+
+    def ingest_fused(self, traces, out_vecs, *, stream_id: int = 0,
+                     t0: int = 0) -> int:
+        """Land a full single-stream fused run (``(n_w, W)`` trace
+        leaves): all T rows route to shard ``stream_id % n_shards``."""
+        T = int(out_vecs.shape[0])
+        assert out_vecs.ndim == 2 and out_vecs.shape[1] == self.out_dim
+        # (n_w, W) -> (n_w, 1, W): the multi kernel with V=1
+        sub = {src: traces[src][:, None] for src, _ in _RUN_KEYS}
+        return self._ingest_multi(sub, jnp.asarray(out_vecs,
+                                                   jnp.float32)[None],
+                                  stream_base=stream_id, t0=t0)
+
+    def ingest_fused_multi(self, traces, out_vecs, *,
+                           stream_base: int = 0, t0: int = 0) -> int:
+        """Land a full multi-stream fused run (``(n_w, V, W)`` leaves):
+        stream ``v``'s trace routes to shard
+        ``(stream_base + v) % n_shards`` — ONE shard_map dispatch, no
+        host gathers."""
+        assert out_vecs.ndim == 3 and out_vecs.shape[2] == self.out_dim
+        sub = {src: traces[src] for src, _ in _RUN_KEYS}
+        return self._ingest_multi(sub, jnp.asarray(out_vecs, jnp.float32),
+                                  stream_base=stream_base, t0=t0)
+
+    def _ingest_multi(self, sub, out_vecs, *, stream_base, t0) -> int:
+        V, T = int(out_vecs.shape[0]), int(out_vecs.shape[1])
+        counts = self._owner_counts(stream_base + np.arange(V)) * T
+        self._reserve(counts)
+        kern = _shard_kernel("fused_multi", self.mesh, self.n_shards)
+        self.columns, self.n_rows_dev = kern(
+            self.columns, self.n_rows_dev, sub, out_vecs,
+            jnp.int32(stream_base), jnp.int32(t0), T=T)
+        self.n_rows_by_shard += counts
+        self.t_max = max(self.t_max, t0 + T - 1)
+        return V * T
+
+    def ingest_tick(self, traces, *, quality, out_vecs, t: int) -> int:
+        """Land one serving-pool tick (V rows, stream v -> shard
+        ``v % n_shards``)."""
+        V = int(out_vecs.shape[0])
+        assert out_vecs.ndim == 2 and out_vecs.shape[1] == self.out_dim
+        counts = self._owner_counts(np.arange(V))
+        self._reserve(counts)
+        sub = {src: traces[src] for src, _ in _RUN_KEYS}
+        kern = _shard_kernel("tick", self.mesh, self.n_shards)
+        self.columns, self.n_rows_dev = kern(
+            self.columns, self.n_rows_dev, sub,
+            jnp.asarray(quality, jnp.float32),
+            jnp.asarray(out_vecs, jnp.float32), jnp.int32(t))
+        self.n_rows_by_shard += counts
+        self.t_max = max(self.t_max, t)
+        return V
+
+    def append_rows(self, rows: Dict[str, jnp.ndarray]) -> int:
+        """Generic batched append, routed by the rows' own stream ids."""
+        n = int(np.shape(rows["t"])[0])
+        assert set(rows) == {c for c, _ in SCALAR_COLUMNS} | {OUT_COLUMN}, \
+            "need exactly the store's columns"
+        counts = self._owner_counts(rows["stream_id"])
+        self._reserve(counts)
+        upd = {k: jnp.asarray(v) for k, v in rows.items()}
+        kern = _shard_kernel("append", self.mesh, self.n_shards)
+        self.columns, self.n_rows_dev = kern(self.columns,
+                                             self.n_rows_dev, upd)
+        self.n_rows_by_shard += counts
+        if n:
+            self.t_max = max(self.t_max,
+                             int(np.max(np.asarray(rows["t"]))))
+        return n
+
+    # -- reading -------------------------------------------------------
+    def shard_source(self):
+        """(stacked columns, per-shard valid row counts) — what the
+        sharded query kernel consumes."""
+        return self.columns, self.n_rows_dev
+
+    def query(self, plan, **kw):
+        """ONE shard_map dispatch: per-shard partial kernel + merge
+        combiner (see ``warehouse.query.execute_sharded``)."""
+        from repro.warehouse import query as Q
+        return Q.execute_sharded(self, plan, **kw)
+
+    def host_rows(self) -> Dict[str, np.ndarray]:
+        """All live rows as host numpy, shard-major (an explicit full
+        transfer — tests/exports only; the query path never needs it)."""
+        out = {}
+        for k, v in self.columns.items():
+            h = np.asarray(v)
+            out[k] = np.concatenate(
+                [h[s, : self.n_rows_by_shard[s]]
+                 for s in range(self.n_shards)])
+        return out
+
+    def __len__(self) -> int:
+        return self.n_rows
+
+    def __repr__(self) -> str:
+        dev = "mesh" if self.mesh is not None else "stacked"
+        return (f"ShardedStore(shards={self.n_shards}[{dev}], "
+                f"rows={self.n_rows_by_shard.tolist()}, "
+                f"cap={self.capacity}, out_dim={self.out_dim}, "
+                f"chunk={self.chunk_rows})")

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.distribution.compression import dequantize, quantize_int8
-from repro.warehouse.store import SegmentStore
+from repro.warehouse.store import SegmentStore, ShardedStore
 
 
 @functools.partial(jax.jit, static_argnames=("n", "chunk"))
@@ -160,6 +160,228 @@ class TieredStore:
 
     def __repr__(self) -> str:
         return (f"TieredStore(hot={self.hot.n_rows}, cold={self.n_cold}, "
+                f"chunk={self.hot.chunk_rows})")
+
+
+# ---------------------------------------------------------------------------
+# sharded tiering: every shard spills its own oldest chunks
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n", "chunk"))
+def _quantize_chunks_sharded(cols, key, *, n: int, chunk: int):
+    """Per-shard ``_quantize_chunks``: quantize the first ``n`` rows of
+    every shard's block with one scale per (shard, chunk)."""
+    n_shards = next(iter(cols.values())).shape[0]
+    keys = jax.random.split(key, n_shards)
+    return jax.vmap(lambda c, k: _quantize_chunks(c, k, n=n,
+                                                  chunk=chunk))(cols, keys)
+
+
+@jax.jit
+def _cold_write(dst, src, off):
+    """Append each shard's spill block at that shard's own cold offset
+    (``dst``/``src`` are dicts of (S, cap, ...) / (S, n, ...) arrays;
+    ``off`` is (S,) int32). Rows past a shard's real spill depth are
+    junk until a later spill overwrites them — they sit beyond the
+    shard's valid cold count, so queries never see them."""
+    def one(d, s, o):
+        idx = (o,) + (0,) * (s.ndim - 1)
+        return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), idx)
+
+    return {k: jax.vmap(one)(dst[k], src[k], off) for k in dst}
+
+
+@jax.jit
+def _compact_ragged(cols, d):
+    """Drop the first ``d_s`` rows of every shard's hot block (per-shard
+    dynamic depth), shifting survivors to row 0 and zero-filling the
+    tail (capacity unchanged)."""
+    def one(cols_s, d_s):
+        def shift(v):
+            idx = jnp.arange(v.shape[0]) + d_s
+            return jnp.take(v, idx, axis=0, mode="fill", fill_value=0)
+
+        return {k: shift(v) for k, v in cols_s.items()}
+
+    return jax.vmap(one)(cols, d)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _materialize_sharded(cold_q, cold_scales, cold_int, hot_cols, c, *,
+                         chunk: int):
+    """Combined two-tier view with per-shard cold depths: dequantize
+    every shard's cold block, then land the hot block at that shard's
+    own cold-valid offset ``c_s`` — so each shard's valid rows stay a
+    prefix (c_s cold rows, then its hot rows) whatever the imbalance."""
+    def one(q, s, i, h, c_s):
+        out = {}
+        for name, hot in h.items():
+            if name in q:
+                qq = q[name]
+                n_chunks = qq.shape[0] // chunk
+                deq = jax.vmap(dequantize)(qq.reshape(n_chunks, -1),
+                                           s[name])
+                cold = deq.reshape(qq.shape).astype(hot.dtype)
+            else:
+                cold = i[name]
+            dst = jnp.concatenate([cold, jnp.zeros_like(hot)])
+            idx = (c_s,) + (0,) * (hot.ndim - 1)
+            out[name] = jax.lax.dynamic_update_slice(dst, hot, idx)
+        return out
+
+    return jax.vmap(one)(cold_q, cold_scales, cold_int, hot_cols, c)
+
+
+class ShardedTieredStore:
+    """Hot/cold tiering over a ``ShardedStore``: the spill is PER SHARD
+    and RAGGED — each shard quantizes however many of its own oldest
+    whole chunks exceed ``keep_hot`` (its own scales, one vmapped
+    dispatch over the stacked shard axis), so an imbalanced or even
+    permanently-empty shard never blocks the others from spilling.
+    Cold blocks live in one capacity-padded stacked array with a
+    per-shard valid depth; each shard's materialized rows are its valid
+    cold rows followed by its hot rows (a per-shard-offset
+    ``dynamic_update_slice``), keeping validity a prefix, and queries
+    span both tiers through the same ONE-dispatch sharded partial/merge
+    engine."""
+
+    def __init__(self, hot: ShardedStore, seed: int = 0):
+        self.hot = hot
+        self.seed = int(seed)
+        self._spills = 0
+        self.n_cold_by_shard = np.zeros(hot.n_shards, np.int64)
+        self.cold_q: Dict[str, jnp.ndarray] = {}
+        self.cold_scales: Dict[str, jnp.ndarray] = {}
+        self.cold_int: Dict[str, jnp.ndarray] = {}
+        self._mat_cache = None
+
+    @property
+    def n_shards(self) -> int:
+        return self.hot.n_shards
+
+    @property
+    def mesh(self):
+        return self.hot.mesh
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.n_cold_by_shard.sum()) + self.hot.n_rows
+
+    @property
+    def t_max(self) -> int:
+        return self.hot.t_max
+
+    @property
+    def cold_capacity(self) -> int:
+        return self.cold_q["quality"].shape[1] if self.cold_q else 0
+
+    def _cold_reserve(self, need: int) -> None:
+        """Grow the stacked cold arrays (chunk-aligned, geometric) to
+        fit the deepest shard's cold depth."""
+        cap = self.cold_capacity
+        if need <= cap:
+            return
+        chunk = self.hot.chunk_rows
+        new_cap = -(-max(need, 2 * cap) // chunk) * chunk
+
+        def grow(tree, cap_units, unit):
+            pad = (new_cap // unit) - cap_units
+            return {k: jnp.pad(v, ((0, 0), (0, pad))
+                               + ((0, 0),) * (v.ndim - 2))
+                    for k, v in tree.items()}
+
+        if not self.cold_q:     # first spill: build from the hot schema
+            S = self.n_shards
+            for name, col in self.hot.columns.items():
+                tail = col.shape[2:]
+                if col.dtype == jnp.float32:
+                    self.cold_q[name] = jnp.zeros((S, new_cap) + tail,
+                                                  jnp.int8)
+                    self.cold_scales[name] = jnp.zeros(
+                        (S, new_cap // chunk), jnp.float32)
+                else:
+                    self.cold_int[name] = jnp.zeros((S, new_cap) + tail,
+                                                    col.dtype)
+            return
+        self.cold_q = grow(self.cold_q, cap, 1)
+        self.cold_int = grow(self.cold_int, cap, 1)
+        self.cold_scales = grow(self.cold_scales, cap // chunk, chunk)
+
+    def spill(self, keep_hot: int) -> int:
+        """Move each shard's oldest whole chunks to its cold tier until
+        at most ``keep_hot`` rows (rounded up to a chunk) stay hot on
+        that shard — depths are ragged across shards, so imbalanced or
+        empty shards never block the rest. Returns total rows spilled."""
+        # keep_hot >= 0 keeps every depth <= that shard's live rows:
+        # capacity padding can never enter the cold tier as phantom data
+        assert keep_hot >= 0, keep_hot
+        chunk = self.hot.chunk_rows
+        d = np.maximum(
+            ((self.hot.n_rows_by_shard - keep_hot) // chunk) * chunk, 0)
+        d_max = int(d.max())
+        if d_max <= 0:
+            return 0
+        # reserve the full d_max write window past EVERY shard's offset
+        # (not just its own depth d_s): _cold_write lands a d_max-row
+        # block at each shard's offset, and dynamic_update_slice CLAMPS
+        # an out-of-range start backward — an unreserved junk tail would
+        # silently overwrite the deepest shard's valid cold rows
+        self._cold_reserve(int((self.n_cold_by_shard + d_max).max()))
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 self._spills)
+        self._spills += 1
+        # quantize the deepest depth on EVERY shard (static shape); a
+        # shard whose own depth is smaller writes the extra rows as
+        # junk past its valid cold count, where later spills overwrite
+        # them — they are never queried and its hot copy stays live
+        q, scales, ints = _quantize_chunks_sharded(
+            self.hot.columns, key, n=d_max, chunk=chunk)
+        off = jnp.asarray(self.n_cold_by_shard, jnp.int32)
+        self.cold_q = _cold_write(self.cold_q, q, off)
+        self.cold_int = _cold_write(self.cold_int, ints, off)
+        self.cold_scales = _cold_write(self.cold_scales, scales,
+                                       off // chunk)
+        d_dev = jnp.asarray(d, jnp.int32)
+        self.hot.columns = _compact_ragged(self.hot.columns, d_dev)
+        self.hot.n_rows_by_shard = self.hot.n_rows_by_shard - d
+        self.hot.n_rows_dev = self.hot.n_rows_dev - d_dev
+        self.n_cold_by_shard += d
+        return int(d.sum())
+
+    def shard_source(self):
+        """(stacked columns spanning both tiers, per-shard valid counts):
+        each shard's rows are its valid cold rows followed by its hot
+        rows, so valid rows stay a per-shard prefix. Memoized like
+        ``TieredStore.materialize``."""
+        if not self.n_cold_by_shard.any():
+            return self.hot.shard_source()
+        cold_key = tuple(self.n_cold_by_shard)
+        c = self._mat_cache
+        off = jnp.asarray(self.n_cold_by_shard, jnp.int32)
+        if c is not None and c[0] is self.hot.columns \
+                and c[1] == cold_key:
+            return c[2], off + self.hot.n_rows_dev
+        cols = _materialize_sharded(self.cold_q, self.cold_scales,
+                                    self.cold_int, self.hot.columns,
+                                    off, chunk=self.hot.chunk_rows)
+        self._mat_cache = (self.hot.columns, cold_key, cols)
+        return cols, off + self.hot.n_rows_dev
+
+    def query(self, plan, **kw):
+        from repro.warehouse import query as Q
+        return Q.execute_sharded(self, plan, **kw)
+
+    def max_cold_scale(self) -> float:
+        """Largest per-(shard, chunk) quantization scale across the cold
+        tier — the per-element error bound of cold-row values."""
+        if not self.cold_scales:
+            return 0.0
+        return max(float(jnp.max(s)) for s in self.cold_scales.values())
+
+    def __repr__(self) -> str:
+        return (f"ShardedTieredStore(shards={self.n_shards}, "
+                f"hot={self.hot.n_rows_by_shard.tolist()}, "
+                f"cold={self.n_cold_by_shard.tolist()}, "
                 f"chunk={self.hot.chunk_rows})")
 
 

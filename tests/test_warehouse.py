@@ -9,10 +9,10 @@ from benchmarks.fused_ingest_bench import _synthetic_fitted
 from repro.configs.workloads import COVID
 from repro.core import ingest as IG
 from repro.data.stream import generate
-from repro.warehouse import (Filter, GroupBy, Project, SegmentStore,
-                             TieredStore, TopK, WindowAgg, execute,
-                             execute_ref, load_warehouse, save_warehouse,
-                             to_host, windows_for)
+from repro.warehouse import (Filter, GroupBy, MultiGroupBy, Project,
+                             SegmentStore, TieredStore, TopK, WindowAgg,
+                             execute, execute_ref, load_warehouse,
+                             save_warehouse, to_host, windows_for)
 from repro.warehouse import query as Q
 
 N_CORES = 8  # matches the profile baked into _synthetic_fitted
@@ -193,6 +193,69 @@ def test_query_project_and_row_topk():
     # to_host compacts to the valid rows only
     host = to_host(table, mask)
     assert len(host["quality"]) == int(np.asarray(mask).sum())
+
+
+def test_query_multigroupby_window_x_category_exact():
+    """Multi-key GroupBy (time window x content category) fuses the key
+    tuple into ONE segment_sum pass and matches the numpy reference
+    bit-exact; decoded key columns enumerate the full cross product."""
+    store = SegmentStore(out_dim=3, chunk_rows=2048)
+    store.append_rows(_random_rows(5000, 3, seed=21))
+    cols = _host_cols(store)
+    nw = windows_for(store, 400)
+    for agg in ("sum", "mean", "count", "max", "min"):
+        plan = (Filter("quality", "ge", 0.3),
+                MultiGroupBy(keys=("t", "category"), value="on_core_s",
+                             agg=agg, nums=(nw, 4), windows=(400, 0)))
+        table, mask = execute(store, plan)
+        ref, rmask = execute_ref(cols, store.n_rows, plan)
+        np.testing.assert_array_equal(np.asarray(table["on_core_s"]),
+                                      ref["on_core_s"], err_msg=agg)
+        np.testing.assert_array_equal(np.asarray(table["count"]),
+                                      ref["count"])
+        np.testing.assert_array_equal(np.asarray(table["t"]), ref["t"])
+        np.testing.assert_array_equal(np.asarray(table["category"]),
+                                      ref["category"])
+        np.testing.assert_array_equal(np.asarray(mask), rmask)
+    # three keys, no windowing, composed with a TopK over the result
+    plan = (MultiGroupBy(keys=("stream_id", "category", "k"),
+                         value="quality", agg="sum", nums=(4, 4, 3)),
+            TopK(6, by="quality"))
+    table, mask = execute(store, plan)
+    ref, rmask = execute_ref(cols, store.n_rows, plan)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(table[k]), ref[k],
+                                      err_msg=k)
+    np.testing.assert_array_equal(np.asarray(mask), rmask)
+    # the fused encoding equals an equivalent single-key GroupBy over a
+    # hand-fused id column: window*4 + category
+    h = _host_cols(store)
+    fused_ids = (np.asarray(h["t"]) // 400) * 4 + np.asarray(h["category"])
+    plan_m = (MultiGroupBy(keys=("t", "category"), value="quality",
+                           agg="sum", nums=(nw, 4), windows=(400, 0)),)
+    tm, _ = execute(store, plan_m)
+    hand = {**h, "fused": fused_ids.astype(np.int32)}
+    rg, _ = execute_ref(hand, store.n_rows,
+                        (GroupBy("fused", "quality", agg="sum",
+                                 num_groups=nw * 4),))
+    np.testing.assert_array_equal(np.asarray(tm["quality"]), rg["quality"])
+
+
+def test_query_groupby_wide_out_column():
+    """GroupBy over the (row, D) embedding column aggregates per lane
+    and matches the reference bit-exact (sum/mean) on one shard."""
+    store = SegmentStore(out_dim=4, chunk_rows=1024)
+    store.append_rows(_random_rows(3000, 4, seed=22))
+    cols = _host_cols(store)
+    for agg in ("sum", "mean"):
+        plan = (Filter("quality", "ge", 0.5),
+                GroupBy("category", "out", agg=agg, num_groups=4))
+        table, mask = execute(store, plan)
+        ref, rmask = execute_ref(cols, store.n_rows, plan)
+        assert np.asarray(table["out"]).shape == (4, 4)
+        np.testing.assert_array_equal(np.asarray(table["out"]),
+                                      ref["out"], err_msg=agg)
+        np.testing.assert_array_equal(np.asarray(mask), rmask)
 
 
 def test_query_int_filter_exact_past_f32_precision():
