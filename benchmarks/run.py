@@ -33,6 +33,13 @@ _NUM = re.compile(r"-?\d+(?:\.\d+)?(?:[eE]-?\d+)?")
 _FLOOR_KEYS = ("speedup", "scan")
 _FLOOR_DROP = 0.20
 
+# metric-name substrings treated as CEILINGS (smaller is better, with
+# zero headroom): the static-audit headline numbers. A dispatch count,
+# scatter census, recompile count or violation count that GROWS at all
+# vs the baseline fails the compare — these are structural properties
+# of the compiled programs, not noisy timings.
+_CEILING_KEYS = ("dispatch", "scatter_ops", "recompile", "violation")
+
 
 def _metric_dict(row) -> dict:
     """Row -> metric dict: the leading number of every ``k=v`` part of
@@ -65,33 +72,70 @@ def _compare(snap: dict, old_path: str) -> int:
         for key, new_v in sorted(snap[name].items()):
             old_v = old[name].get(key)
             if not isinstance(new_v, (int, float)) \
-                    or not isinstance(old_v, (int, float)) or old_v == 0:
+                    or not isinstance(old_v, (int, float)):
                 continue
-            delta = (new_v - old_v) / abs(old_v)
             is_floor = any(fk in key for fk in _FLOOR_KEYS)
-            flag = " [floor]" if is_floor else ""
+            is_ceiling = any(ck in key for ck in _CEILING_KEYS)
+            if old_v == 0 and not is_ceiling:
+                continue                  # ratio undefined; ceilings
+            delta = (new_v - old_v) / abs(old_v) if old_v else 0.0
+            flag = " [floor]" if is_floor else \
+                " [ceiling]" if is_ceiling else ""
             if is_floor and new_v < old_v * (1.0 - _FLOOR_DROP):
                 flag = " [floor] REGRESSION >20%"
                 regressions.append(f"{name}.{key}")
+            elif is_ceiling and new_v > old_v:
+                flag = " [ceiling] REGRESSION (grew)"
+                regressions.append(f"{name}.{key}")
             print(f"{name}.{key}: {old_v:.4g} -> {new_v:.4g} "
                   f"({delta:+.1%}){flag}")
-    # baseline floor metrics this run no longer reports at all
+    # baseline floor/ceiling metrics this run no longer reports at all
     for name, metrics in sorted(old.items()):
         missing = [key for key, old_v in metrics.items()
                    if isinstance(old_v, (int, float))
-                   and any(fk in key for fk in _FLOOR_KEYS)
+                   and any(k in key for k in _FLOOR_KEYS + _CEILING_KEYS)
                    and not isinstance(snap.get(name, {}).get(key),
                                       (int, float))]
         if name not in snap:
             print(f"# {name}: missing from this run (was in baseline)")
         for key in missing:
             print(f"{name}.{key}: {metrics[key]:.4g} -> MISSING "
-                  f"[floor] REGRESSION (metric disappeared)")
+                  f"REGRESSION (gated metric disappeared)")
             regressions.append(f"{name}.{key}")
     if regressions:
-        print(f"FAIL: floor metrics regressed >20%: "
-              f"{', '.join(regressions)}", file=sys.stderr)
+        print(f"FAIL: gated metrics regressed (floor drop >20% or "
+              f"ceiling growth): {', '.join(regressions)}",
+              file=sys.stderr)
     return len(regressions)
+
+
+def _audit_record() -> dict:
+    """Static-audit headline numbers for the perf snapshot: per-engine
+    dispatch counts (ONE warm call = N executables) and the scatter
+    census of every warehouse query plan — the structural floor the
+    Pallas query-kernel work has to beat. All ceilings: growth fails
+    ``--compare``."""
+    from repro.analysis.run import run_audit
+    report = run_audit(skip_source=True)
+    recs = report["engines"]
+    out = {
+        "engines": float(len(recs)),
+        "violations": float(report["n_violations"]),
+        "dispatch_total": float(sum(
+            r["dispatch"]["new_executables"] for r in recs.values()
+            if "dispatch" in r)),
+        "recompiles_total": float(sum(
+            r["dispatch"]["recompiles"] for r in recs.values()
+            if "dispatch" in r)),
+    }
+    for name, r in sorted(recs.items()):
+        if "jaxpr_census" in r:
+            out[f"dispatch.{name}"] = float(
+                r.get("dispatch", {}).get("new_executables", 0))
+        if name.startswith("warehouse_query") and "jaxpr_census" in r:
+            t = r["jaxpr_census"]["totals"]
+            out[f"scatter_ops.{name}"] = float(t["scatter_executed"])
+    return out
 
 
 def main() -> None:
@@ -148,6 +192,13 @@ def main() -> None:
     snap = {row["name"]: _metric_dict(row) for row in common.records()}
     for name, err in errors.items():
         snap[f"{name}/ERROR"] = {"error": err}
+    if not only or only in "static_audit":
+        try:
+            snap["static_audit"] = _audit_record()
+        except Exception as e:  # noqa: BLE001
+            snap["static_audit/ERROR"] = {"error": str(e)}
+            errors["static_audit"] = str(e)
+            traceback.print_exc(file=sys.stderr)
     if json_out:
         with open(json_out, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)

@@ -36,12 +36,28 @@ done
 
 python -m pytest -x -q "${args[@]+"${args[@]}"}"
 
+echo "== static program audit (jaxpr/HLO/source) vs ANALYSIS.json =="
+# every registered engine must audit clean, and no engine's dispatch
+# count may grow vs the committed baseline (generated at 1 device; the
+# compare skips dispatch deltas automatically on other topologies)
+AUDIT_OUT="$(mktemp)"
+python -m repro.analysis --json "$AUDIT_OUT" --compare ANALYSIS.json
+rm -f "$AUDIT_OUT"
+
 echo "== sharded warehouse suite on 8 forced host devices =="
 # appended last: XLA flag parsing is last-wins, so this overrides any
 # device-count already in XLA_FLAGS (e.g. CI's =1) for this leg only
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   python -m pytest -x -q tests/test_sharded_warehouse.py \
-    tests/test_sharded_properties.py
+    tests/test_sharded_properties.py tests/test_analysis.py
+
+echo "== static program audit on 8 forced host devices (violations only) =="
+# the shard_map engines compile with real collectives here; any
+# violation (unbalanced collective, clip scatter, callback) still fails
+AUDIT_OUT="$(mktemp)"
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+  python -m repro.analysis --json "$AUDIT_OUT"
+rm -f "$AUDIT_OUT"
 
 if [[ "$BENCH_SMOKE" == "1" ]]; then
   for bench in fused_ingest_bench warehouse_bench sharded_warehouse_bench \

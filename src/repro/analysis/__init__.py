@@ -1,0 +1,13 @@
+"""Static program auditor: jaxpr lint, compiled-HLO audit and source
+lint over every registered engine. ``python -m repro.analysis`` runs
+all passes and writes ``ANALYSIS.json``; see ``repro.analysis.run``.
+
+Import surface is kept light: the registry has no repro dependencies
+so engine modules can register at import time without cycles.
+"""
+from repro.analysis.registry import (DEFAULT_INVARIANTS, Engine,
+                                     EngineExample, SkipEngine, engines,
+                                     register_engine)
+
+__all__ = ["DEFAULT_INVARIANTS", "Engine", "EngineExample", "SkipEngine",
+           "engines", "register_engine"]

@@ -1,0 +1,5 @@
+import sys
+
+from repro.analysis.run import main
+
+sys.exit(main())

@@ -1,0 +1,297 @@
+"""Pass 3 — source lint: AST sweep over ``src/`` for the JAX pitfalls
+the repo bans by convention but that neither the jaxpr nor the HLO can
+show (they happen *before* tracing, or only on the unhappy path).
+
+The pass first discovers every jit boundary in a module:
+
+- ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorated defs,
+- ``name = jax.jit(fn, ...)`` module-level wrappings,
+
+then computes the *traced set*: those functions, every def nested
+inside them, every function handed to ``lax.scan`` / ``shard_map`` /
+``vmap`` / ``cond`` / ``while_loop``, and (to a fixpoint) every
+same-module function they call. Inside the traced set it flags:
+
+- ``np_call_in_jit`` — ``np.foo(...)`` under trace produces a constant
+  (silently wrong) or a TracerConversionError (loudly wrong); either
+  way host numpy does not belong inside a jitted body.
+- ``python_branch_on_operand`` — ``if param:`` / ``if param > x:`` on a
+  *traced* parameter. (Branches on static argnames, attributes like
+  ``x.shape``, or locals are exempt — those are trace-time values.)
+- ``global_in_jit`` — a ``global`` statement inside a traced body is a
+  tracer leak waiting to happen: the tracer outlives the trace and
+  poisons the next call.
+- ``unhashable_static_default`` — a static argname whose default is a
+  list/dict/set literal fails at call time with an opaque hash error.
+- ``static_name_missing`` — ``static_argnames`` naming a parameter the
+  wrapped function does not have (jit silently ignores it and the arg
+  gets traced, recompiling per value).
+
+It also returns the set of module-level jitted definitions found in
+``core/`` / ``warehouse/`` / ``distribution/`` so the auditor can
+cross-reference them against the registry's ``covers`` union — a jitted
+entry point nobody registered (no probe, no invariants) is itself a
+violation (``unregistered_jit``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+# modules whose jitted defs must be covered by the engine registry
+REGISTRY_SCOPED = ("repro/core", "repro/warehouse", "repro/distribution")
+
+_TRACING_CALLS = ("scan", "while_loop", "cond", "vmap", "shard_map",
+                  "fori_loop", "switch", "checkpoint", "remat")
+
+
+def _dotted(node) -> str:
+    """Best-effort dotted name of an expression ('jax.jit', 'np.sum')."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit(node) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _static_names(call: ast.Call) -> Tuple[str, ...]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            if isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, str):
+                return (kw.value.value,)
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in kw.value.elts
+                             if isinstance(e, ast.Constant))
+    return ()
+
+
+class _JitSite:
+    def __init__(self, public_name, target, statics, call, lineno,
+                 toplevel=True, node=None):
+        self.public_name = public_name    # module-level binding, if any
+        self.target = target              # wrapped FunctionDef name/None
+        self.statics = statics            # static argnames
+        self.call = call                  # the jax.jit Call node (or None)
+        self.lineno = lineno
+        self.toplevel = toplevel          # module-level binding?
+        self.node = node                  # the FunctionDef itself, if known
+
+
+def _find_jit_sites(tree: ast.Module) -> List[_JitSite]:
+    sites: List[_JitSite] = []
+    top = {id(n) for n in tree.body if isinstance(n, ast.FunctionDef)}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            lvl = id(node) in top
+            for dec in node.decorator_list:
+                if _is_jit(dec):
+                    sites.append(_JitSite(node.name, node.name, (),
+                                          None, node.lineno, lvl, node))
+                elif isinstance(dec, ast.Call):
+                    if _is_jit(dec.func):
+                        sites.append(_JitSite(node.name, node.name,
+                                              _static_names(dec), dec,
+                                              node.lineno, lvl, node))
+                    elif _dotted(dec.func).endswith("partial") \
+                            and dec.args and _is_jit(dec.args[0]):
+                        sites.append(_JitSite(node.name, node.name,
+                                              _static_names(dec), dec,
+                                              node.lineno, lvl, node))
+    for node in tree.body:                # module-level `x = jax.jit(f)`
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and _is_jit(node.value.func):
+            name = node.targets[0].id \
+                if isinstance(node.targets[0], ast.Name) else None
+            target = None
+            if node.value.args:
+                arg0 = node.value.args[0]
+                if isinstance(arg0, ast.Name):
+                    target = arg0.id
+                elif isinstance(arg0, ast.Call):   # jax.jit(jax.vmap(f))
+                    inner = [a.id for a in arg0.args
+                             if isinstance(a, ast.Name)]
+                    target = inner[0] if inner else None
+            sites.append(_JitSite(name, target, _static_names(node.value),
+                                  node.value, node.lineno))
+    return sites
+
+
+def _traced_set(tree: ast.Module, sites: List[_JitSite]
+                ) -> Tuple[Set[str], Dict[str, ast.FunctionDef]]:
+    """Names of functions that run under trace, to a same-module
+    fixpoint, plus the name -> FunctionDef map."""
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, node)
+    traced: Set[str] = {s.target for s in sites if s.target}
+    for node in ast.walk(tree):           # fns handed to scan/vmap/...
+        if isinstance(node, ast.Call):
+            tail = _dotted(node.func).rsplit(".", 1)[-1]
+            if tail in _TRACING_CALLS:
+                for a in node.args[:2]:
+                    if isinstance(a, ast.Name) and a.id in defs:
+                        traced.add(a.id)
+    frontier = list(traced)
+    while frontier:                       # same-module call closure
+        fn = defs.get(frontier.pop())
+        if fn is None:
+            continue
+        for node in ast.walk(fn):
+            name = None
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                name = node.func.id
+            elif isinstance(node, ast.FunctionDef) and node is not fn:
+                name = node.name          # nested def traces with parent
+            if name and name in defs and name not in traced:
+                traced.add(name)
+                frontier.append(name)
+    return traced, defs
+
+
+def _lint_traced_fn(fn: ast.FunctionDef, statics: Set[str], module: str,
+                    violations: List[Dict]):
+    def violate(check, detail, lineno):
+        violations.append({
+            "pass": "source", "check": check, "detail": detail,
+            "path": f"{module}:{fn.name}:{lineno}"})
+
+    params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+    traced_params = params - statics
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            dn = _dotted(node.func)
+            if dn.startswith("np.") or dn.startswith("numpy."):
+                violate("np_call_in_jit",
+                        f"{dn}() inside traced body (host numpy under "
+                        f"jit is a constant-fold or a trace error)",
+                        node.lineno)
+        elif isinstance(node, ast.Global):
+            violate("global_in_jit",
+                    f"global {', '.join(node.names)} inside traced body "
+                    f"(tracer leak via module state)", node.lineno)
+        elif isinstance(node, (ast.If, ast.IfExp)):
+            test = node.test
+            # `if param:` or `param <op> x` where param is traced.
+            # Attribute tests (x.shape...), locals and statics are
+            # trace-time values and exempt.
+            names = []
+            if isinstance(test, ast.Name):
+                names = [test.id]
+            elif isinstance(test, ast.Compare):
+                for sub in [test.left] + list(test.comparators):
+                    if isinstance(sub, ast.Name):
+                        names.append(sub.id)
+                # `x is None` / `x == "lit"` style static dispatch is
+                # fine even on params: only flag arithmetic comparisons
+                if any(isinstance(op, (ast.Is, ast.IsNot, ast.In,
+                                       ast.NotIn)) for op in test.ops):
+                    names = []
+                if any(isinstance(sub, ast.Constant)
+                       and isinstance(sub.value, (str, type(None)))
+                       for sub in [test.left] + list(test.comparators)):
+                    names = []            # string/None compare = dispatch
+            hits = [n for n in names if n in traced_params]
+            if hits:
+                violate("python_branch_on_operand",
+                        f"Python branch on traced parameter "
+                        f"{hits[0]!r} (trace error at runtime; use "
+                        f"lax.cond / jnp.where)", node.lineno)
+
+
+def _lint_jit_site(site: _JitSite, defs: Dict[str, ast.FunctionDef],
+                   module: str, violations: List[Dict]):
+    fn = site.node
+    if fn is None and site.target:        # `x = jax.jit(f)` assign form
+        fn = defs.get(site.target)
+    if fn is None or not site.statics:
+        return
+    params = [a.arg for a in fn.args.args + fn.args.kwonlyargs]
+    for s in site.statics:
+        if s not in params:
+            violations.append({
+                "pass": "source", "check": "static_name_missing",
+                "detail": f"static_argnames={s!r} not a parameter of "
+                          f"{site.target} (jit traces it instead)",
+                "path": f"{module}:{site.target}:{site.lineno}"})
+    # unhashable defaults on static argnames
+    pos = fn.args.args
+    defaults = dict(zip([a.arg for a in pos[len(pos) - len(fn.args.defaults):]],
+                        fn.args.defaults))
+    for a, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if d is not None:
+            defaults[a.arg] = d
+    for s in site.statics:
+        d = defaults.get(s)
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            violations.append({
+                "pass": "source", "check": "unhashable_static_default",
+                "detail": f"static arg {s!r} defaults to an unhashable "
+                          f"{type(d).__name__.lower()} literal",
+                "path": f"{module}:{site.target}:{site.lineno}"})
+
+
+def lint_source(text: str, module: str) -> Tuple[List[Dict], Set[str]]:
+    """Lint one module's source. Returns ``(violations, jit_defs)``
+    where ``jit_defs`` is the set of ``module:name`` jit bindings found
+    (for the registry-coverage cross-reference)."""
+    violations: List[Dict] = []
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:              # pragma: no cover
+        return ([{"pass": "source", "check": "syntax_error",
+                  "detail": str(e), "path": module}], set())
+    sites = _find_jit_sites(tree)
+    traced, defs = _traced_set(tree, sites)
+    statics_of: Dict[str, Set[str]] = {}
+    for s in sites:
+        if s.target:
+            statics_of.setdefault(s.target, set()).update(s.statics)
+    for name in sorted(traced):
+        fn = defs.get(name)
+        if fn is not None:
+            _lint_traced_fn(fn, statics_of.get(name, set()), module,
+                            violations)
+    for s in sites:
+        _lint_jit_site(s, defs, module, violations)
+    # only module-level bindings are registrable entry points; jit
+    # factories that close over a mesh (query's `run`, store's `kern`)
+    # are exercised through the engines that build them
+    jit_defs = {f"{module}:{s.public_name}" for s in sites
+                if s.public_name and s.toplevel}
+    return violations, jit_defs
+
+
+def lint_tree(src_root: str) -> Tuple[List[Dict], Set[str]]:
+    """Lint every ``.py`` under ``src_root``. ``jit_defs`` only
+    collects modules inside ``REGISTRY_SCOPED`` (the packages whose
+    engines must be registered)."""
+    violations: List[Dict] = []
+    jit_defs: Set[str] = set()
+    for dirpath, _dirs, files in os.walk(src_root):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root)
+            module = rel[:-3].replace(os.sep, ".")
+            with open(path, "r") as fh:
+                text = fh.read()
+            v, j = lint_source(text, module)
+            violations.extend(v)
+            mod_path = rel.replace(os.sep, "/")
+            if any(mod_path.startswith(scope + "/") or
+                   mod_path.rsplit(".", 1)[0] == scope
+                   for scope in REGISTRY_SCOPED):
+                jit_defs.update(j)
+    return violations, jit_defs

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import example_builder, register_engine
 from repro.core.categories import kmeans
 from repro.core.forecaster import (forecast_from_labels, init_forecaster,
                                    make_dataset, train_forecaster)
@@ -196,6 +197,12 @@ _pool_shift = jax.jit(lambda bufs, c: jnp.concatenate(
 
 register_cache_probe("pool_replan", lambda: _pool_replan._cache_size())
 register_cache_probe("pool_shift", lambda: _pool_shift._cache_size())
+register_engine("pool_replan", example_builder("pool_replan"),
+                probe=lambda: _pool_replan._cache_size(),
+                covers=("repro.core.api:_pool_replan",))
+register_engine("pool_shift", example_builder("pool_shift"),
+                probe=lambda: _pool_shift._cache_size(),
+                covers=("repro.core.api:_pool_shift",))
 
 
 class SkyscraperPool:

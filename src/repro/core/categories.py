@@ -67,3 +67,20 @@ def classify_1d(qual, k_idx, centers):
     """Paper Eq. 5: argmin_c |centers[c, k_cur] - qual|."""
     col = jnp.take(centers, k_idx, axis=1)
     return jnp.argmin(jnp.abs(col - qual))
+
+
+from repro.analysis.registry import example_builder, register_engine  # noqa: E402
+from repro.core.switcher import register_cache_probe  # noqa: E402
+
+register_cache_probe("categories", lambda: (_lloyd_step._cache_size()
+                                            + classify_full._cache_size()
+                                            + classify_1d._cache_size()))
+register_engine("kmeans_lloyd", example_builder("lloyd_step"),
+                probe=lambda: _lloyd_step._cache_size(),
+                covers=("repro.core.categories:_lloyd_step",))
+register_engine("classify_full", example_builder("classify_full"),
+                probe=lambda: classify_full._cache_size(),
+                covers=("repro.core.categories:classify_full",))
+register_engine("classify_1d", example_builder("classify_1d"),
+                probe=lambda: classify_1d._cache_size(),
+                covers=("repro.core.categories:classify_1d",))

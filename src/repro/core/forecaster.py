@@ -76,6 +76,15 @@ def _adam_step(params, opt, X, Y, lr):
     return params, {"m": m, "v": v, "t": t}
 
 
+from repro.analysis.registry import example_builder, register_engine  # noqa: E402
+from repro.core.switcher import register_cache_probe  # noqa: E402
+
+register_cache_probe("forecaster_adam", lambda: _adam_step._cache_size())
+register_engine("forecaster_adam", example_builder("adam_step"),
+                probe=lambda: _adam_step._cache_size(),
+                covers=("repro.core.forecaster:_adam_step",))
+
+
 def train_forecaster(params, X, Y, *, epochs: int = 40, lr: float = 3e-3,
                      val_frac: float = 0.2, batch: int = 64, seed: int = 0):
     """X (n, n_split, |C|), Y (n, |C|). Returns (best params, metrics)."""
@@ -86,8 +95,10 @@ def train_forecaster(params, X, Y, *, epochs: int = 40, lr: float = 3e-3,
     vi, ti = perm[:n_val], perm[n_val:]
     Xt, Yt = jnp.asarray(X[ti]), jnp.asarray(Y[ti])
     Xv, Yv = jnp.asarray(X[vi]), jnp.asarray(Y[vi])
+    # t must be a strong int32: a python 0 traces weak, so the second
+    # step (strong t from step 1's output) would silently recompile
     opt = {"m": jax.tree.map(jnp.zeros_like, params),
-           "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+           "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.int32(0)}
     best, best_val = params, float("inf")
     nt = Xt.shape[0]
     for ep in range(epochs):

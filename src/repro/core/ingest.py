@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import example_builder, register_engine
 from repro.core.forecaster import forecast_from_labels
 from repro.core.offline import Fitted
 from repro.core.planner import (solve_lp_lagrangian, solve_lp_rationed,
@@ -229,6 +230,9 @@ def _fused_run(state, buf, quals_w, arrs_w, valid_w, wts, fracs, tables,
 
 
 register_cache_probe("fused_single", lambda: _fused_run._cache_size())
+register_engine("fused_single", example_builder("fused_single"),
+                probe=lambda: _fused_run._cache_size(),
+                covers=("repro.core.ingest:_fused_run",))
 
 
 def fused_cache_size() -> int:
@@ -367,6 +371,9 @@ def _fused_run_multi(state, quals_w, arrs_w, valid_w, wts, tables,
 
 
 register_cache_probe("fused_multi", lambda: _fused_run_multi._cache_size())
+register_engine("fused_multi", example_builder("fused_multi"),
+                probe=lambda: _fused_run_multi._cache_size(),
+                covers=("repro.core.ingest:_fused_run_multi",))
 
 
 def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,

@@ -102,6 +102,15 @@ def solve_lp_lagrangian(qual, cost, r, budget, iters: int = 64):
     return jnp.where(s0 <= budget, a0, a_mix)
 
 
+from repro.analysis.registry import example_builder, register_engine  # noqa: E402
+from repro.core.switcher import register_cache_probe  # noqa: E402
+
+register_cache_probe("planner_lp", lambda: solve_lp_lagrangian._cache_size())
+register_engine("lp_lagrangian", example_builder("lp_lagrangian"),
+                probe=lambda: solve_lp_lagrangian._cache_size(),
+                covers=("repro.core.planner:solve_lp_lagrangian",))
+
+
 def solve_lp_rationed(qual, cost, r, *, core_s_per_segment, cloud_left,
                       frac, window_len, cloud_premium):
     """Window-rationed LP entry point (paper §4 online loop): the

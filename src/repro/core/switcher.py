@@ -307,3 +307,20 @@ def compile_cache_sizes() -> Dict[str, int]:
     ``compile_cache_size``): stable values across ticks/windows prove
     zero recompiles after warmup."""
     return {name: int(probe()) for name, probe in _CACHE_PROBES.items()}
+
+
+# ---- static-analysis registry (see repro.analysis) -------------------------
+from repro.analysis.registry import example_builder, register_engine  # noqa: E402
+
+register_engine("switch_step", example_builder("switch_step"),
+                probe=_CACHE_PROBES["switch_step"],
+                covers=("repro.core.switcher:_switch_jit",))
+register_engine("switch_step_multi", example_builder("switch_step_multi"),
+                probe=_CACHE_PROBES["switch_step_multi"],
+                covers=("repro.core.switcher:_switch_multi_jit",))
+register_engine("run_window", example_builder("run_window"),
+                probe=_CACHE_PROBES["run_window"],
+                covers=("repro.core.switcher:_run_window",))
+register_engine("run_window_multi", example_builder("run_window_multi"),
+                probe=_CACHE_PROBES["run_window_multi"],
+                covers=("repro.core.switcher:_run_window_multi",))

@@ -8,6 +8,9 @@ and reports:
 
 - per-kind collective bytes (per-device message sizes x trip counts),
 - dot FLOPs (2 * result_elems * contracted_dim x trip counts),
+- scatter/gather op counts and operand+result bytes (the query-latency
+  floor the ROADMAP's Pallas item targets; scatters usually sit inside
+  fusion computations, so fusion call edges propagate multipliers too),
 - top-level operand+result bytes (memory-traffic proxy).
 
 Validated against cost_analysis() on unrolled lowers in tests.
@@ -111,7 +114,8 @@ def analyze(hlo_text: str) -> Dict:
             cur = mc.group(1)
             comps[cur] = {"colls": defaultdict(int), "coll_counts": defaultdict(int),
                           "dot_flops": 0, "bytes": 0, "dot_bytes": 0,
-                          "whiles": [], "op_count": 0}
+                          "whiles": [], "op_count": 0,
+                          "sg": defaultdict(lambda: [0, 0])}
             continue
         if cur is None or not line.strip().startswith(("%", "ROOT")):
             continue
@@ -129,6 +133,16 @@ def analyze(hlo_text: str) -> Dict:
             if base == kind or base == kind + "-start":
                 c["colls"][kind] += out_bytes
                 c["coll_counts"][kind] += 1
+        if base in ("scatter", "select-and-scatter", "gather"):
+            # io bytes = result + every operand (operand array, indices,
+            # updates) — the traffic a gather/scatter actually moves
+            io = out_bytes
+            for t, n in _call_operands(line, opcode):
+                t = t if t is not None else result_types.get(n)
+                if t:
+                    io += _shape_bytes(t)
+            c["sg"][base][0] += 1
+            c["sg"][base][1] += io
         if base == "while":
             mt = _TRIP_RE.search(line)
             mb = _BODY_RE.search(line)
@@ -174,6 +188,8 @@ def analyze(hlo_text: str) -> Dict:
     for cname, c in comps.items():
         for body, trip in c["whiles"]:
             callers[body].append((cname, trip))
+        for callee in c.get("fusions", ()):
+            callers[callee].append((cname, 1))
 
     memo: Dict[str, float] = {}
 
@@ -194,6 +210,7 @@ def analyze(hlo_text: str) -> Dict:
     dot_flops = 0.0
     raw_bytes = 0.0
     dot_bytes = 0.0
+    census: Dict[str, Dict[str, float]] = {}
     for cname, c in comps.items():
         m = mult.get(cname, 0.0)
         if m == 0.0:
@@ -204,6 +221,12 @@ def analyze(hlo_text: str) -> Dict:
         dot_flops += c["dot_flops"] * m
         raw_bytes += c["bytes"] * m
         dot_bytes += c["dot_bytes"] * m
+        for op, (n, io) in c["sg"].items():
+            e = census.setdefault(
+                op, {"count": 0, "executed": 0.0, "bytes": 0.0})
+            e["count"] += n
+            e["executed"] += n * m
+            e["bytes"] += io * m
 
     # entry argument bytes (params + inputs read once)
     arg_bytes = 0
@@ -217,17 +240,38 @@ def analyze(hlo_text: str) -> Dict:
                 arg_bytes += _shape_bytes(m.group(1))
 
     coll_total = float(sum(colls.values()))
+    scatter_ops = sum(e["executed"] for op, e in census.items()
+                      if op != "gather")
+    gather_ops = census.get("gather", {}).get("executed", 0.0)
+    scatter_bytes = sum(e["bytes"] for op, e in census.items()
+                        if op != "gather")
+    gather_bytes = census.get("gather", {}).get("bytes", 0.0)
     return {
         "collective_bytes": dict(colls),
         "collective_bytes_total": coll_total,
         "collective_counts": {k: float(v) for k, v in coll_counts.items()},
         "dot_flops": float(dot_flops),
+        "scatter_ops": float(scatter_ops),
+        "gather_ops": float(gather_ops),
+        "scatter_bytes": float(scatter_bytes),
+        "gather_bytes": float(gather_bytes),
         # TPU-realistic HBM traffic: matmul operands/results (elementwise
-        # chains fuse into them) + collective payloads + one read of args
-        "bytes_touched": float(dot_bytes + coll_total + arg_bytes),
+        # chains fuse into them) + collective payloads + scatter/gather
+        # traffic (the query floor) + one read of args
+        "bytes_touched": float(dot_bytes + coll_total + scatter_bytes
+                               + gather_bytes + arg_bytes),
         "bytes_touched_raw": float(raw_bytes),
         "argument_bytes": float(arg_bytes),
+        "scatter_census": census,
     }
+
+
+def scatter_census(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Trip-weighted scatter/gather census of one compiled module:
+    ``opcode -> {count (static), executed (x trips), bytes (io x
+    trips)}``. The per-plan-shape numbers any Pallas query kernel has
+    to beat (ROADMAP "Break the scatter floor")."""
+    return analyze(hlo_text)["scatter_census"]
 
 
 # ---------------------------------------------------------------------------

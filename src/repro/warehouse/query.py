@@ -58,6 +58,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.registry import example_builder, register_engine
 from repro.core.switcher import register_cache_probe
 from repro.distribution.compression import compressed_psum, quantize_int8
 
@@ -346,6 +347,16 @@ def _run_plan(cols, n_rows, fvals, *, spec):
 
 
 register_cache_probe("warehouse_query", lambda: _run_plan._cache_size())
+register_engine("warehouse_query_filter_groupby",
+                example_builder("query", "filter_groupby"),
+                probe=lambda: _run_plan._cache_size(),
+                covers=("repro.warehouse.query:_run_plan",))
+register_engine("warehouse_query_window",
+                example_builder("query", "window_sum"),
+                probe=lambda: _run_plan._cache_size())
+register_engine("warehouse_query_multi_topk",
+                example_builder("query", "multi_topk"),
+                probe=lambda: _run_plan._cache_size())
 
 
 def compile_cache_size() -> int:
@@ -534,6 +545,12 @@ def sharded_compile_cache_size() -> int:
 
 
 register_cache_probe("warehouse_query_sharded", sharded_compile_cache_size)
+register_engine("warehouse_query_sharded_groupby",
+                example_builder("query_sharded", "filter_groupby"),
+                probe=sharded_compile_cache_size)
+register_engine("warehouse_query_sharded_topk",
+                example_builder("query_sharded", "topk"),
+                probe=sharded_compile_cache_size)
 
 
 def execute_sharded(store, plan, *, compressed: bool = False, key=None):

@@ -56,6 +56,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.registry import example_builder, register_engine
 from repro.core.switcher import register_cache_probe
 from repro.distribution.sharding import put_row_sharded
 from repro.launch.mesh import make_shard_mesh
@@ -280,6 +281,21 @@ register_cache_probe(
     lambda: (_scatter._cache_size() + _ingest_fused._cache_size()
              + _ingest_fused_multi._cache_size()
              + _ingest_tick._cache_size()))
+register_engine("warehouse_scatter", example_builder("store_scatter"),
+                probe=lambda: _scatter._cache_size(),
+                covers=("repro.warehouse.store:_scatter",))
+register_engine("warehouse_ingest_fused",
+                example_builder("store_ingest_fused"),
+                probe=lambda: _ingest_fused._cache_size(),
+                covers=("repro.warehouse.store:_ingest_fused",))
+register_engine("warehouse_ingest_fused_multi",
+                example_builder("store_ingest_fused_multi"),
+                probe=lambda: _ingest_fused_multi._cache_size(),
+                covers=("repro.warehouse.store:_ingest_fused_multi",))
+register_engine("warehouse_ingest_tick",
+                example_builder("store_ingest_tick"),
+                probe=lambda: _ingest_tick._cache_size(),
+                covers=("repro.warehouse.store:_ingest_tick",))
 
 
 # ---------------------------------------------------------------------------
@@ -372,9 +388,20 @@ def _shard_kernel(kind: str, mesh, n_shards: int):
     return kern
 
 
-register_cache_probe(
-    "warehouse_append_sharded",
-    lambda: sum(k._cache_size() for k in _SHARD_KERNELS.values()))
+def _sharded_append_cache_size():
+    return sum(k._cache_size() for k in _SHARD_KERNELS.values())
+
+
+register_cache_probe("warehouse_append_sharded", _sharded_append_cache_size)
+register_engine("warehouse_append_sharded",
+                example_builder("store_sharded", "append"),
+                probe=_sharded_append_cache_size)
+register_engine("warehouse_ingest_sharded_fused",
+                example_builder("store_sharded", "fused_multi"),
+                probe=_sharded_append_cache_size)
+register_engine("warehouse_ingest_sharded_tick",
+                example_builder("store_sharded", "tick"),
+                probe=_sharded_append_cache_size)
 
 
 class ShardedStore:

@@ -415,3 +415,50 @@ def load_warehouse(path: str) -> TieredStore:
         ts.cold_scales = tree["cold"]["scales"]
         ts.cold_int = tree["cold"]["ints"]
     return ts
+
+
+# ---- cache probes + static-analysis registry -------------------------------
+from repro.analysis.registry import example_builder, register_engine  # noqa: E402
+from repro.core.switcher import register_cache_probe  # noqa: E402
+
+register_cache_probe(
+    "warehouse_tiers",
+    lambda: (_quantize_chunks._cache_size() + _compact._cache_size()
+             + _materialize._cache_size()))
+register_cache_probe(
+    "warehouse_tiers_sharded",
+    lambda: (_quantize_chunks_sharded._cache_size()
+             + _cold_write._cache_size() + _compact_ragged._cache_size()
+             + _materialize_sharded._cache_size()))
+
+register_engine("tiers_quantize", example_builder("tiers_quantize"),
+                probe=lambda: _quantize_chunks._cache_size(),
+                covers=("repro.warehouse.tiers:_quantize_chunks",))
+register_engine("tiers_compact", example_builder("tiers_compact"),
+                probe=lambda: _compact._cache_size(),
+                covers=("repro.warehouse.tiers:_compact",))
+register_engine("tiers_materialize", example_builder("tiers_materialize"),
+                probe=lambda: _materialize._cache_size(),
+                covers=("repro.warehouse.tiers:_materialize",))
+register_engine("tiers_quantize_sharded",
+                example_builder("tiers_quantize_sharded"),
+                probe=lambda: _quantize_chunks_sharded._cache_size(),
+                covers=("repro.warehouse.tiers:_quantize_chunks_sharded",))
+# the CLIP scatters in _cold_write / _materialize_sharded are vmapped
+# dynamic_update_slice — start-index clamping is that op's documented
+# semantics (offsets are cumulative cold depths, in range by
+# construction), not an out-of-bounds footgun, so the clip ban is
+# waived for exactly these two engines.
+register_engine("tiers_cold_write", example_builder("tiers_cold_write"),
+                invariants={"no_clip_scatter": False},
+                probe=lambda: _cold_write._cache_size(),
+                covers=("repro.warehouse.tiers:_cold_write",))
+register_engine("tiers_compact_ragged",
+                example_builder("tiers_compact_ragged"),
+                probe=lambda: _compact_ragged._cache_size(),
+                covers=("repro.warehouse.tiers:_compact_ragged",))
+register_engine("tiers_materialize_sharded",
+                example_builder("tiers_materialize_sharded"),
+                invariants={"no_clip_scatter": False},
+                probe=lambda: _materialize_sharded._cache_size(),
+                covers=("repro.warehouse.tiers:_materialize_sharded",))
