@@ -18,10 +18,21 @@ throughputs, the numbers the engine benches assert lower bounds on)
 regressed by more than 20%::
 
     python benchmarks/run.py --json BENCH_NEW.json --compare BENCH_PR3.json
+
+Floor metrics are ratios of two timings measured on the SAME host, so
+they only compare across snapshots from the same machine class: each
+snapshot records a ``host`` fingerprint (CPU core count), and when it
+differs from the baseline's, floor regressions are reported as
+warnings instead of failures (a 2-core baseline says nothing about a
+1-core container's python-loop denominators). The structural CEILING
+metrics (dispatch counts, scatter census, recompiles, violations) are
+host-independent properties of the compiled programs and stay hard
+failures everywhere.
 """
 from __future__ import annotations
 
 import json
+import os
 import re
 import sys
 import traceback
@@ -55,15 +66,35 @@ def _metric_dict(row) -> dict:
     return out
 
 
+def _host_cores(snap: dict):
+    """Host fingerprint of a snapshot: the dedicated ``host`` record,
+    falling back to the core count the sharded bench row has always
+    carried (pre-fingerprint baselines)."""
+    for rec in ("host", "sharded_query_bench"):
+        v = snap.get(rec, {}).get("host_cores")
+        if isinstance(v, (int, float)):
+            return v
+    return None
+
+
 def _compare(snap: dict, old_path: str) -> int:
     """Print per-metric deltas vs a prior snapshot; return the number of
     >20% floor-metric regressions. A floor metric that existed in the
     baseline but is MISSING from this run (the bench errored out, was
     filtered away, or its derived key was renamed) counts as a
     regression too — a gate that goes green when its benchmark
-    disappears is no gate."""
+    disappears is no gate. Floor deltas are only GATED when both
+    snapshots come from the same host class (see module docstring);
+    ceilings are gated unconditionally."""
     with open(old_path) as f:
         old = json.load(f)
+    old_cores, new_cores = _host_cores(old), _host_cores(snap)
+    same_host = (old_cores is None or new_cores is None
+                 or old_cores == new_cores)
+    if not same_host:
+        print(f"# host class changed ({old_cores:.0f} -> "
+              f"{new_cores:.0f} cores): floor deltas advisory, "
+              f"ceilings still gated")
     regressions = []
     for name in sorted(snap):
         if name not in old:
@@ -82,8 +113,11 @@ def _compare(snap: dict, old_path: str) -> int:
             flag = " [floor]" if is_floor else \
                 " [ceiling]" if is_ceiling else ""
             if is_floor and new_v < old_v * (1.0 - _FLOOR_DROP):
-                flag = " [floor] REGRESSION >20%"
-                regressions.append(f"{name}.{key}")
+                if same_host:
+                    flag = " [floor] REGRESSION >20%"
+                    regressions.append(f"{name}.{key}")
+                else:
+                    flag = " [floor] WARNING >20% (host class changed)"
             elif is_ceiling and new_v > old_v:
                 flag = " [ceiling] REGRESSION (grew)"
                 regressions.append(f"{name}.{key}")
@@ -135,6 +169,15 @@ def _audit_record() -> dict:
         if name.startswith("warehouse_query") and "jaxpr_census" in r:
             t = r["jaxpr_census"]["totals"]
             out[f"scatter_ops.{name}"] = float(t["scatter_executed"])
+    # aggregated ceiling over every fused-Pallas query engine: the
+    # scatter floor the kernel breaks is pinned at literally ZERO, so
+    # any single scatter creeping into any Pallas-path plan fails
+    # --compare even if a new engine is registered without its own
+    # per-engine baseline
+    out["scatter_ops.query_pallas"] = float(sum(
+        r["jaxpr_census"]["totals"]["scatter_executed"]
+        for name, r in recs.items()
+        if "_pallas" in name and "jaxpr_census" in r))
     return out
 
 
@@ -190,6 +233,8 @@ def main() -> None:
             errors[name] = str(e)
             traceback.print_exc(file=sys.stderr)
     snap = {row["name"]: _metric_dict(row) for row in common.records()}
+    # host fingerprint: floor metrics only gate against same-class hosts
+    snap["host"] = {"host_cores": float(os.cpu_count() or 1)}
     for name, err in errors.items():
         snap[f"{name}/ERROR"] = {"error": err}
     if not only or only in "static_audit":

@@ -117,6 +117,40 @@ def _inner(tiny: bool) -> None:
             f"8-shard engine must be >=2x the 1-shard engine, got " \
             f"{speedup:.2f}x"
 
+    # ---- fused Pallas partials inside the shard_map dispatch ----------
+    # same plan minus the TopK post node (runs after the merge), each
+    # shard's partial through the fused kernel: exactness vs the numpy
+    # reference plus a zero-scatter census of the per-shard kernel —
+    # the scatter floor stays broken under sharding.
+    import jax.numpy as jnp
+
+    from repro.analysis import DEFAULT_INVARIANTS
+    from repro.analysis.jaxpr_lint import lint_jaxpr, trace_closed_jaxpr
+    S = counts[-1]
+    store = ShardedStore(out_dim=4, n_shards=S, chunk_rows=T // S)
+    store.append_rows(rows)
+    nw = windows_for(store, WINDOW)
+    pplan = plan(0.5, nw)[:2]
+    ptable, pmask = store.query(pplan, use_pallas=True)
+    pref, prmask = execute_ref(store.host_rows(), T, pplan)
+    np.testing.assert_array_equal(np.asarray(pmask), prmask)
+    np.testing.assert_array_equal(np.asarray(ptable["count"]),
+                                  pref["count"])
+    np.testing.assert_allclose(np.asarray(ptable["quality"]),
+                               pref["quality"], rtol=1e-5, atol=1e-4)
+    spec, fvals = Q.normalize(pplan)
+    pre, node, _post = Q.split_plan(spec)
+    shard_cols = {k: v[0] for k, v in store.columns.items()}
+    _, census = lint_jaxpr(trace_closed_jaxpr(
+        lambda c, n, fv: Q._shard_partial_pallas(c, n, fv, jnp.int32(0),
+                                                 pre=pre, node=node),
+        (shard_cols, jnp.int32(T // S), fvals), {}), DEFAULT_INVARIANTS)
+    n_scatter = census["totals"]["scatter_executed"]
+    assert n_scatter == 0, \
+        f"sharded Pallas partial executes {n_scatter} scatters"
+    print(f"warehouse_sharded/query_pallas/S{S}_T{T},0.00,"
+          f"scatter_ops=0;shards={S};exact=count;mean_rtol=1e-5")
+
 
 def run(verbose: bool = True, tiny: bool = False):
     """Re-exec under a forced 8-device CPU topology and re-emit the

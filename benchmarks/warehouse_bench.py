@@ -158,6 +158,34 @@ def run(verbose: bool = True, tiny: bool = False):
     if not tiny:
         assert speedup >= 5.0, \
             f"warehouse query must be >=5x the host loop, got {speedup:.1f}x"
+
+    # ---- fused Pallas path: exactness + the broken scatter floor ------
+    # interpret mode on CPU is a correctness path, so this leg records
+    # the census (ZERO executed scatters for the groupby-style plan),
+    # not a timing claim; on TPU the same kernel compiles natively.
+    pplan = (Filter("quality", "ge", float(thrs[-1])),
+             WindowAgg(window=WINDOW, value="quality", agg="mean",
+                       num_windows=nw))
+    pref, prmask = execute_ref(cols_np, store.n_rows, pplan)
+    pt, pm = execute(store, pplan, use_pallas=True)
+    assert np.array_equal(np.asarray(pm), prmask)
+    assert np.array_equal(np.asarray(pt["count"]), pref["count"])
+    assert np.allclose(np.asarray(pt["quality"]), pref["quality"],
+                       rtol=1e-5, atol=1e-4)
+    from repro.analysis import DEFAULT_INVARIANTS
+    from repro.analysis.jaxpr_lint import lint_jaxpr, trace_closed_jaxpr
+    spec, fvals = Q.normalize(pplan)
+    args = (store.columns, np.int32(store.n_rows), fvals)
+    _, census = lint_jaxpr(trace_closed_jaxpr(
+        lambda c, n, fv: Q._run_plan(c, n, fv, spec=spec,
+                                     use_pallas=True), args, {}),
+        DEFAULT_INVARIANTS)
+    n_scatter = census["totals"]["scatter_executed"]
+    assert n_scatter == 0, f"Pallas query path executes {n_scatter} scatters"
+    if verbose:
+        emit(f"warehouse/query_pallas/T{T}", 0.0,
+             f"scatter_ops=0;exact=count,window;mean_rtol=1e-5;"
+             f"interpret={jax.default_backend() != 'tpu'}")
     return [speedup]
 
 

@@ -49,7 +49,8 @@ echo "== sharded warehouse suite on 8 forced host devices =="
 # device-count already in XLA_FLAGS (e.g. CI's =1) for this leg only
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   python -m pytest -x -q tests/test_sharded_warehouse.py \
-    tests/test_sharded_properties.py tests/test_analysis.py
+    tests/test_sharded_properties.py tests/test_warehouse_agg_pallas.py \
+    tests/test_analysis.py
 
 echo "== static program audit on 8 forced host devices (violations only) =="
 # the shard_map engines compile with real collectives here; any

@@ -246,6 +246,11 @@ def _plan(kind: str):
                 TopK(5, "quality"))
     if kind == "topk":
         return (Filter("t", "lt", 48), TopK(5, "quality"))
+    if kind == "group_max":
+        # int-column filter + max agg: the fused kernel's in-register
+        # int_pred path and ∓inf-sentinel accumulator path
+        return (Filter("k", "gt", 0.5),
+                GroupBy("category", "quality", agg="max", num_groups=C))
     raise ValueError(kind)
 
 
@@ -257,7 +262,19 @@ def query(kind: str):
                          {"spec": spec})
 
 
-def query_sharded(kind: str):
+def query_pallas(kind: str):
+    """Same plans as ``query`` but through the fused Pallas
+    filter+group+aggregate kernel (interpret mode on CPU) — the
+    auditor's scatter census over these engines is the
+    scatter-floor-broken proof (0 executed scatters)."""
+    from repro.warehouse.query import _run_plan, normalize
+    spec, fvals = normalize(_plan(kind))
+    return EngineExample(_run_plan,
+                         (_store_cols(), jnp.int32(50), fvals),
+                         {"spec": spec, "use_pallas": True})
+
+
+def query_sharded(kind: str, use_pallas: bool = False):
     from repro.launch.mesh import make_shard_mesh
     from repro.warehouse.query import _sharded_kernel, normalize
     spec, fvals = normalize(_plan(kind))
@@ -266,7 +283,8 @@ def query_sharded(kind: str):
     return EngineExample(kern,
                          (_store_cols(stacked=True), n_valid, fvals,
                           jax.random.PRNGKey(0)),
-                         {"spec": spec, "compressed": False})
+                         {"spec": spec, "compressed": False,
+                          "use_pallas": bool(use_pallas)})
 
 
 # ---- warehouse: ingest engines ---------------------------------------------

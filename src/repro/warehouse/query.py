@@ -37,6 +37,17 @@ Aggregations use ``jax.ops.segment_sum`` with static group counts, so
 no data-dependent shapes ever materialize; filtered-out and padding
 rows participate as exact no-ops (weight 0 / -inf).
 
+Aggregation partials have TWO interchangeable kernels behind
+``use_pallas`` (see ``execute``): the XLA ``segment_sum`` path above,
+and the fused Pallas filter+group+aggregate kernel
+(``repro.kernels.warehouse_agg``) that evaluates the predicate mask
+in-register and accumulates into an on-chip ``(n_groups[, lanes])``
+accumulator with ZERO scatters — the auditor's scatter census is 0 on
+that path (the XLA path pins one executed scatter per groupby-style
+plan). Both produce the identical ``{"acc", "cnt"}`` partial, share
+``_seg_finalize`` and the merge combiners, and ``execute_sharded``
+runs the fused kernel per shard inside its single shard_map dispatch.
+
 ``execute`` returns ``(table, mask)``: a dict of device columns plus a
 validity mask over its rows (top-k slots beyond the number of matching
 groups are masked off). ``execute_ref`` is the plain-numpy reference
@@ -61,6 +72,9 @@ from jax.sharding import PartitionSpec as P
 from repro.analysis.registry import example_builder, register_engine
 from repro.core.switcher import register_cache_probe
 from repro.distribution.compression import compressed_psum, quantize_int8
+from repro.kernels.warehouse_agg import (CMP as _CMP, FusedAggSpec,
+                                         fused_segment_agg, int_pred,
+                                         pallas_auto)
 
 
 @dataclass(frozen=True)
@@ -132,44 +146,18 @@ class _FilterRef:
     idx: int
 
 
-_CMP = {
-    "eq": lambda a, b: a == b,
-    "ne": lambda a, b: a != b,
-    "lt": lambda a, b: a < b,
-    "le": lambda a, b: a <= b,
-    "gt": lambda a, b: a > b,
-    "ge": lambda a, b: a >= b,
-}
-
-
-def _int_pred(x, op, i, is_int):
-    """Exact real-number comparison of an INTEGER column x against a
-    threshold given as (floor, integral?) — computed host-side in
-    float64, so neither side ever rounds through f32 (which collapses
-    ints past 2^24; the append-only ``t`` column crosses that after
-    ~388 days of 2 s segments). All branches are dynamic operands:
-    changing the threshold, integral or not, never recompiles."""
-    i = i.astype(x.dtype)             # floor(v), the largest int <= v
-    if op == "ge":                    # x >= v
-        return jnp.where(is_int, x >= i, x >= i + 1)
-    if op == "gt":                    # x > v  <=>  x >= floor(v)+1
-        return x >= i + 1
-    if op == "le":                    # x <= v  <=>  x <= floor(v)
-        return x <= i
-    if op == "lt":                    # x < v
-        return jnp.where(is_int, x <= i - 1, x <= i)
-    if op == "eq":
-        return is_int & (x == i)
-    return ~is_int | (x != i)         # ne
-
-
 def normalize(plan):
     """Split a plan into its static shape (hashable spec) and the
     dynamic filter-value operands: the f32 thresholds (float columns)
-    plus each threshold's float64-computed floor and integrality
-    (integer columns — f32 can't hold ints past 2^24, so those are
-    hoisted host-side at full precision)."""
-    spec, vals, floors, isint = [], [], [], []
+    plus each threshold's float64-computed floor, integrality, and
+    out-of-int32-range flag (integer columns — f32 can't hold ints
+    past 2^24, so those are hoisted host-side at full precision).
+    ``int_pred``'s rewrites are closed-form in the floor (no ±1
+    arithmetic), so every threshold with a representable int32 floor —
+    including the ±2^31 edges — compares exactly; ``oob`` (-1/0/+1)
+    marks thresholds outside int32 entirely (incl. ∓inf), where the
+    comparison is a constant for every possible column value."""
+    spec, vals, floors, isint, oob = [], [], [], [], []
     for node in plan:
         if isinstance(node, Filter):
             assert node.op in _CMP, f"unknown filter op {node.op!r}"
@@ -177,18 +165,16 @@ def normalize(plan):
             v = float(node.value)
             assert not math.isnan(v), "NaN filter threshold"
             vals.append(np.float32(v))
-            # symmetric clamp: _int_pred computes i±1, so the floor must
-            # stay one step inside int32 on BOTH ends (an unclamped
-            # -2^31 would wrap `lt`'s i-1 to +2^31-1 and match rows a
-            # float64 comparison rejects). +/-inf clamps to the end
-            # matching its sign. Thresholds beyond the clamp are only
-            # approximate at the extreme +/-2^31 edge of int32 data.
-            if math.isinf(v):
-                fl = (2 ** 31 - 2) if v > 0 else (-2 ** 31 + 1)
+            if v >= 2.0 ** 31:                 # incl. +inf
+                ob, fl, ii = 1, 0, False
+            elif v < -2.0 ** 31:               # incl. -inf
+                ob, fl, ii = -1, 0, False
             else:
-                fl = min(max(math.floor(v), -2 ** 31 + 1), 2 ** 31 - 2)
+                ob, fl = 0, math.floor(v)      # in [-2^31, 2^31 - 1]
+                ii = v == fl
             floors.append(np.int32(fl))
-            isint.append(math.isfinite(v) and v == fl)
+            isint.append(ii)
+            oob.append(np.int32(ob))
         else:
             if isinstance(node, MultiGroupBy):
                 assert len(node.keys) >= 1 and \
@@ -200,7 +186,8 @@ def normalize(plan):
             spec.append(node)
     return tuple(spec), (jnp.asarray(np.asarray(vals, np.float32)),
                          jnp.asarray(np.asarray(floors, np.int32)),
-                         jnp.asarray(np.asarray(isint, bool)))
+                         jnp.asarray(np.asarray(isint, bool)),
+                         jnp.asarray(np.asarray(oob, np.int32)))
 
 
 # ---------------------------------------------------------------------------
@@ -266,8 +253,16 @@ def _seg_partial(table, mask, node):
 
 
 def _seg_finalize(acc, cnt, agg):
-    """Merged accumulators -> the agg's answer (pure; shared verbatim by
-    the 1-shard and sharded paths, so they cannot drift)."""
+    """Merged accumulators -> the agg's answer (pure; shared verbatim
+    by the 1-shard, sharded, and Pallas paths, so they cannot drift).
+
+    Empty-group contract: a group with NO surviving rows (filtered out
+    or never present) answers 0.0 with ``count == 0`` and a masked-off
+    result row, for EVERY agg — the ``∓inf`` sentinels that seed
+    ``max``/``min`` accumulators (and survive pmax/pmin merges of
+    all-empty shards) must never leak into a result table.
+    ``execute_ref`` defines the same contract and the regression tests
+    in tests/test_warehouse_agg_pallas.py pin it on all three paths."""
     if agg == "mean":
         c = jnp.maximum(cnt, 1.0)
         out = acc / (c if acc.ndim == cnt.ndim else c[:, None])
@@ -306,12 +301,13 @@ def _apply_nodes(table, mask, fvals, spec):
     pre-reduction and post-merge phases."""
     for node in spec:
         if isinstance(node, _FilterRef):
-            vals, floors, isint = fvals
+            vals, floors, isint, oob = fvals
             col = table[node.column]
             if jnp.issubdtype(col.dtype, jnp.integer):
-                i, ii = floors[node.idx], isint[node.idx]
+                i, ii, ob = floors[node.idx], isint[node.idx], \
+                    oob[node.idx]
                 pred = jax.vmap(
-                    lambda x: _int_pred(x, node.op, i, ii))(col)
+                    lambda x: int_pred(x, node.op, i, ii, ob))(col)
             else:
                 v = vals[node.idx]
                 pred = jax.vmap(
@@ -338,8 +334,73 @@ def _apply_nodes(table, mask, fvals, spec):
     return table, mask
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def _run_plan(cols, n_rows, fvals, *, spec):
+def _pallas_spec(pre, node, cols):
+    """``FusedAggSpec`` for a plan's partial phase, or None when the
+    fused Pallas kernel cannot run it: no reducer / TopK reducer /
+    wide-column max-min, or a pre-node referencing columns the XLA
+    path would reject (Project order is honored, so forced-Pallas
+    never silently answers a plan the fallback path errors on).
+    ``cols`` may be real arrays or per-shard ShapeDtypeStructs."""
+    if node is None or isinstance(node, TopK):
+        return None
+    avail = set(cols)
+    filters = []
+    for nd in pre:
+        if isinstance(nd, _FilterRef):
+            if nd.column not in avail:
+                return None
+            filters.append((nd.column, nd.op, nd.idx))
+        elif isinstance(nd, Project):
+            if not set(nd.columns) <= avail:
+                return None
+            avail = set(nd.columns)
+        else:
+            return None
+    if isinstance(node, GroupBy):
+        keys = ((node.key, node.num_groups, 0),)
+    elif isinstance(node, WindowAgg):
+        keys = (("t", node.num_windows, node.window),)
+    else:                                            # MultiGroupBy
+        wins = node.windows or (0,) * len(node.keys)
+        keys = tuple(zip(node.keys, node.nums, wins))
+    if not {k for k, _, _ in keys} | {node.value} <= avail:
+        return None
+    if len(cols[node.value].shape) == 2 and node.agg in ("max", "min"):
+        return None                  # the XLA path asserts scalar too
+    return FusedAggSpec(filters=tuple(filters), keys=keys,
+                        value=node.value, agg=node.agg)
+
+
+def _resolve_use_pallas(flag, pre, node, cols) -> bool:
+    """Host-side dispatch: ``False`` forces XLA; ``True`` requests the
+    fused kernel (falling back to XLA when the plan shape doesn't fit
+    it — e.g. TopK reducers); ``None`` is the cost-based auto policy
+    (``pallas_auto``): Pallas on TPU for on-chip-sized accumulators,
+    XLA elsewhere (CPU interpret mode is a correctness path only)."""
+    if flag is not None and not flag:
+        return False
+    aspec = _pallas_spec(pre, node, cols)
+    if aspec is None:
+        return False
+    if flag:
+        return True
+    width = cols[aspec.value].shape[1] \
+        if len(cols[aspec.value].shape) == 2 else 1
+    return pallas_auto(aspec, width)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "use_pallas"))
+def _run_plan(cols, n_rows, fvals, *, spec, use_pallas=False):
+    if use_pallas:
+        # fused Pallas partial (no scatter, mask in-register) + the
+        # SAME finalize/post nodes as the XLA path
+        pre, node, post = split_plan(spec)
+        aspec = _pallas_spec(pre, node, cols)
+        assert aspec is not None, "unsupported plan for the fused kernel"
+        part = fused_segment_agg(cols, n_rows, fvals, spec=aspec)
+        out, cnt = _seg_finalize(part["acc"], part["cnt"], node.agg)
+        table, mask = _seg_table(node, out, cnt)
+        return _apply_nodes(table, mask, fvals, post)
     cap = cols["t"].shape[0] if "t" in cols else \
         next(iter(cols.values())).shape[0]
     mask = jnp.arange(cap) < n_rows
@@ -356,6 +417,22 @@ register_engine("warehouse_query_window",
                 probe=lambda: _run_plan._cache_size())
 register_engine("warehouse_query_multi_topk",
                 example_builder("query", "multi_topk"),
+                probe=lambda: _run_plan._cache_size())
+# the fused Pallas path (use_pallas=True) — the "_pallas" suffix keys
+# the per-engine scatter_ops.* ceilings AND the aggregated
+# scatter_ops.query_pallas=0 metric in benchmarks/run.py: the audit
+# fails the bench --compare if a scatter ever creeps back in
+register_engine("warehouse_query_pallas_groupby",
+                example_builder("query_pallas", "filter_groupby"),
+                probe=lambda: _run_plan._cache_size())
+register_engine("warehouse_query_pallas_window",
+                example_builder("query_pallas", "window_sum"),
+                probe=lambda: _run_plan._cache_size())
+register_engine("warehouse_query_pallas_groupmax",
+                example_builder("query_pallas", "group_max"),
+                probe=lambda: _run_plan._cache_size())
+register_engine("warehouse_query_pallas_multi",
+                example_builder("query_pallas", "multi_topk"),
                 probe=lambda: _run_plan._cache_size())
 
 
@@ -443,6 +520,16 @@ def _compressed_sum(acc, combine, key):
     return total * (scale.sum() / combine.n)
 
 
+def _shard_partial_pallas(cols, n_valid, fvals, shard_id, *, pre, node):
+    """``_shard_partial`` with the whole filter+group+aggregate partial
+    as ONE fused Pallas kernel pass — the identical ``{"acc", "cnt"}``
+    convention, so the merge combiners and finalize are untouched
+    (selected per-plan by ``execute_sharded``'s ``use_pallas``)."""
+    aspec = _pallas_spec(pre, node, cols)
+    assert aspec is not None, "unsupported plan for the fused kernel"
+    return fused_segment_agg(cols, n_valid, fvals, spec=aspec)
+
+
 def _shard_partial(cols, n_valid, fvals, shard_id, *, pre, node):
     """ONE shard's partial: row-local pre nodes, then the reduce node's
     fixed-shape mergeable accumulators (or the masked rows themselves
@@ -507,14 +594,18 @@ def _sharded_kernel(mesh, n_shards: int):
     if kern is not None:
         return kern
 
-    @functools.partial(jax.jit, static_argnames=("spec", "compressed"))
-    def run(cols, n_valid, fvals, key, *, spec, compressed):
+    @functools.partial(jax.jit,
+                       static_argnames=("spec", "compressed",
+                                        "use_pallas"))
+    def run(cols, n_valid, fvals, key, *, spec, compressed,
+            use_pallas=False):
         pre, node, post = split_plan(spec)
+        part_fn = _shard_partial_pallas if use_pallas else _shard_partial
         if mesh is None:
             # single-device fallback: vmap the SAME partial kernel over
             # the stacked shard axis, merge by axis-0 reduction
             sids = jnp.arange(n_shards, dtype=jnp.int32)
-            part = jax.vmap(lambda c, n, s: _shard_partial(
+            part = jax.vmap(lambda c, n, s: part_fn(
                 c, n, fvals, s, pre=pre, node=node))(cols, n_valid, sids)
             return _merge_partials(part, node, post, fvals,
                                    _StackedCombine(n_shards), key,
@@ -522,8 +613,8 @@ def _sharded_kernel(mesh, n_shards: int):
 
         def body(c, n, fv, k):
             sid = jax.lax.axis_index("shard")
-            part = _shard_partial({name: v[0] for name, v in c.items()},
-                                  n[0], fv, sid, pre=pre, node=node)
+            part = part_fn({name: v[0] for name, v in c.items()},
+                           n[0], fv, sid, pre=pre, node=node)
             return _merge_partials(part, node, post, fv,
                                    _CollectiveCombine("shard", n_shards),
                                    k, compressed)
@@ -551,23 +642,34 @@ register_engine("warehouse_query_sharded_groupby",
 register_engine("warehouse_query_sharded_topk",
                 example_builder("query_sharded", "topk"),
                 probe=sharded_compile_cache_size)
+register_engine("warehouse_query_pallas_sharded",
+                example_builder("query_sharded", "filter_groupby", True),
+                probe=sharded_compile_cache_size)
 
 
-def execute_sharded(store, plan, *, compressed: bool = False, key=None):
+def execute_sharded(store, plan, *, compressed: bool = False, key=None,
+                    use_pallas=None):
     """Run ``plan`` over a sharded store as ONE dispatch: the per-shard
     partial kernel through ``shard_map`` on the store's device mesh
     followed by the pure merge combiner (psum / pmax / all-gather), or
     the vmapped stacked equivalent when the host lacks the devices.
     ``compressed=True`` merges float partial sums through int8
     quantization (see ``_compressed_sum``) — exact counts, lossy sums.
+    ``use_pallas`` picks the per-shard partial kernel exactly like
+    ``execute`` (None = cost-based auto; True = fused Pallas partials
+    inside the same shard_map dispatch, when the plan shape fits).
     Returns ``(table, mask)`` of replicated device arrays."""
     cols, n_valid = store.shard_source()
     spec, fvals = normalize(plan)
     if key is None:
         key = jax.random.PRNGKey(0)
+    pre, node, _post = split_plan(spec)
+    shard_cols = {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                  for k, v in cols.items()}
+    up = _resolve_use_pallas(use_pallas, pre, node, shard_cols)
     kern = _sharded_kernel(store.mesh, store.n_shards)
     return kern(cols, n_valid, fvals, key, spec=spec,
-                compressed=bool(compressed))
+                compressed=bool(compressed), use_pallas=up)
 
 
 def _source(store):
@@ -581,15 +683,23 @@ def _source(store):
     return cols, n
 
 
-def execute(store, plan):
+def execute(store, plan, *, use_pallas=None):
     """Run ``plan`` over ``store`` as one compiled dispatch; returns
     ``(table, mask)`` of device arrays. Sharded stores route to
-    ``execute_sharded``."""
+    ``execute_sharded``. ``use_pallas=None`` picks the backend-aware
+    cost-based dispatch (fused Pallas kernel on TPU for on-chip-sized
+    accumulators, XLA ``segment_sum`` elsewhere); ``True`` forces the
+    fused kernel for plan shapes it supports — on CPU it runs in
+    interpret mode, a correctness path, not a fast one — and ``False``
+    forces the XLA path."""
     if hasattr(store, "shard_source"):
-        return execute_sharded(store, plan)
+        return execute_sharded(store, plan, use_pallas=use_pallas)
     cols, n_rows = _source(store)
     spec, fvals = normalize(plan)
-    return _run_plan(cols, jnp.int32(n_rows), fvals, spec=spec)
+    pre, node, _post = split_plan(spec)
+    up = _resolve_use_pallas(use_pallas, pre, node, cols)
+    return _run_plan(cols, jnp.int32(n_rows), fvals, spec=spec,
+                     use_pallas=up)
 
 
 def windows_for(store, window: int) -> int:
@@ -676,9 +786,28 @@ def _np_seg_table(node, out, cnt):
     return table, cnt > 0
 
 
+def _np_topk_idx(score, kk: int) -> np.ndarray:
+    """Mirror ``lax.top_k``'s ordering exactly: descending IEEE-754
+    TOTAL order — so ``+0.0`` outranks ``-0.0``, which a plain
+    ``np.argsort(-score)`` treats as equal and orders by index —
+    with ties at identical bit patterns broken by ascending row index
+    (both are stable). The total order comes from the classic
+    sign-magnitude bit flip: non-negative floats set the sign bit,
+    negative floats invert all bits, and the uint32 keys then sort in
+    float total order."""
+    bits = np.ascontiguousarray(np.asarray(score, np.float32)) \
+        .view(np.uint32)
+    key = np.where(bits & np.uint32(0x80000000), ~bits,
+                   bits | np.uint32(0x80000000))
+    return np.argsort(~key, kind="stable")[:kk].astype(np.int32)
+
+
 def execute_ref(cols: Dict[str, np.ndarray], n_rows: int, plan):
     """Plain-numpy mirror of ``execute`` (same clipping, masking, and
-    summation-order semantics). Returns ``(table, mask)`` in numpy."""
+    summation-order semantics — including ``_seg_finalize``'s
+    empty-group contract: 0.0 / count 0 / masked row for every agg,
+    and ``lax.top_k``'s total-order tie-break). Returns ``(table,
+    mask)`` in numpy."""
     cap = len(next(iter(cols.values())))
     mask = np.arange(cap) < n_rows
     table = {k: np.asarray(v) for k, v in cols.items()}
@@ -704,7 +833,7 @@ def execute_ref(cols: Dict[str, np.ndarray], n_rows: int, plan):
             if not node.largest:
                 score = np.where(np.isfinite(score), -score, score)
             kk = min(node.k, len(score))
-            idx = np.argsort(-score, kind="stable")[:kk].astype(np.int32)
+            idx = _np_topk_idx(score, kk)
             top = score[idx]
             table = {c: np.take(table[c], idx, axis=0) for c in table}
             table["index"] = idx

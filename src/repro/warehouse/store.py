@@ -237,11 +237,12 @@ class SegmentStore:
         return n
 
     # -- reading -------------------------------------------------------
-    def query(self, plan):
+    def query(self, plan, **kw):
         """Run a compiled query plan over the live rows (see
-        ``warehouse.query``)."""
+        ``warehouse.query``; ``use_pallas=`` selects the aggregation
+        kernel)."""
         from repro.warehouse import query as Q
-        return Q.execute(self, plan)
+        return Q.execute(self, plan, **kw)
 
     def host_rows(self) -> Dict[str, np.ndarray]:
         """All live rows as host numpy (an explicit full transfer — for

@@ -147,9 +147,9 @@ class TieredStore:
         self._mat_cache = (self.hot.columns, self.n_cold, cols)
         return cols, self.n_rows
 
-    def query(self, plan):
+    def query(self, plan, **kw):
         from repro.warehouse import query as Q
-        return Q.execute(self, plan)
+        return Q.execute(self, plan, **kw)
 
     def max_cold_scale(self) -> float:
         """Largest per-chunk quantization scale across the cold tier —

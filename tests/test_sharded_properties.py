@@ -3,6 +3,12 @@ partial/merge execution matches the single-device engine — exact for
 counts and integer-valued columns, fp32-regrouping-tolerant for float
 sums — including empty shards, empty stores, and ragged last chunks.
 
+Each case also draws a ``use_pallas`` axis: when True, the sharded
+query runs its per-shard partials through the fused Pallas kernel
+(interpret mode on CPU) AND the single-device Pallas path is checked
+three-ways against the XLA engine and the numpy mirror under the same
+exactness contract.
+
 Runs through real ``hypothesis`` when installed, else the bundled
 deterministic fallback runner (tests/_hypothesis_fallback.py). On the
 forced-8-device CI leg the drawn shard counts get real meshes and the
@@ -13,7 +19,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.warehouse import (Filter, GroupBy, MultiGroupBy, SegmentStore,
-                             ShardedStore, TopK, WindowAgg, execute_ref)
+                             ShardedStore, TopK, WindowAgg, execute,
+                             execute_ref)
 
 _FLOAT_COLS = ("quality", "on_core_s", "buffer_s")
 _INT_COLS = ("category", "k", "stream_id")
@@ -53,9 +60,12 @@ def _cases(draw):
     kind = draw(st.sampled_from(["group", "window", "multi", "topk"]))
     agg = draw(st.sampled_from(["sum", "mean", "count", "max", "min"]))
     value = draw(st.sampled_from(_FLOAT_COLS + ("k",)))
+    use_pallas = draw(st.booleans())
     if kind == "group":
         key = draw(st.sampled_from(_INT_COLS))
-        plan.append(GroupBy(key, value, agg=agg, num_groups=6))
+        # num_groups=1 is the single-accumulator degenerate shape
+        plan.append(GroupBy(key, value, agg=agg,
+                            num_groups=draw(st.sampled_from([1, 6]))))
     elif kind == "window":
         plan.append(WindowAgg(window=draw(st.sampled_from([50, 130])),
                               value=value, agg=agg, num_windows=9))
@@ -70,13 +80,13 @@ def _cases(draw):
         # from a bug)
         plan.append(TopK(draw(st.integers(min_value=1, max_value=12)),
                          by=value, largest=draw(st.booleans())))
-    return n, n_shards, data_seed, tuple(plan)
+    return n, n_shards, data_seed, tuple(plan), use_pallas
 
 
 @settings(max_examples=60, deadline=None)
 @given(_cases())
 def test_sharded_matches_single_device(case):
-    n, n_shards, data_seed, plan = case
+    n, n_shards, data_seed, plan, use_pallas = case
     rows = _rows(n, np.random.default_rng(data_seed))
     single = SegmentStore(out_dim=2, chunk_rows=48)
     sharded = ShardedStore(out_dim=2, n_shards=n_shards, chunk_rows=48)
@@ -86,7 +96,7 @@ def test_sharded_matches_single_device(case):
     assert sharded.n_rows == single.n_rows == n
     cols = {k: np.asarray(v) for k, v in single.columns.items()}
     ref, rmask = execute_ref(cols, n, plan)
-    table, mask = sharded.query(plan)
+    table, mask = sharded.query(plan, use_pallas=use_pallas)
     m, rm = np.asarray(mask), np.asarray(rmask)
 
     reduce_node = next((nd for nd in plan
@@ -119,3 +129,15 @@ def test_sharded_matches_single_device(case):
             continue
         np.testing.assert_array_equal(np.asarray(table[key]), ref[key],
                                       err_msg=key)
+    if use_pallas:
+        # three-way: the single-device fused Pallas kernel must meet
+        # the same contract vs the numpy mirror (and hence vs XLA)
+        ptable, pmask = execute(single, plan, use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(pmask), rm)
+        np.testing.assert_array_equal(np.asarray(ptable["count"]),
+                                      ref["count"])
+        pgot = np.asarray(ptable[value], np.float32)
+        if exact:
+            np.testing.assert_array_equal(pgot, want)
+        else:
+            np.testing.assert_allclose(pgot, want, rtol=1e-5, atol=1e-4)

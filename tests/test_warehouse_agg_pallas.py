@@ -1,0 +1,387 @@
+"""Fused Pallas filter+group+aggregate kernel (interpret mode on CPU)
+plus the segment-aggregation edge-case contracts it shares with the XLA
+path:
+
+- Pallas vs XLA vs numpy agreement for every agg, scalar and wide
+  value columns, multi-block grids, and post-reduction nodes;
+- the empty-group contract (0.0 / count 0 / masked row — never ±inf)
+  on the single-device, sharded (stacked AND collective pmax/pmin on
+  the forced-8-device tier-1 leg), and Pallas paths;
+- exhaustive ``int_pred`` coverage vs a float64 mirror across
+  signs/integrality/out-of-int32-range thresholds (the old ``i±1``
+  rewrites mis-bucketed negative non-integral thresholds and broke at
+  the int32 clamp edge);
+- ``lax.top_k`` tie-breaking (incl. ``-0.0`` vs ``+0.0``, which plain
+  ``np.argsort(-score)`` orders differently) mirrored by
+  ``execute_ref``;
+- the scatter census: ZERO executed scatters on the Pallas path for a
+  groupby plan whose XLA path executes >= 1.
+
+fp32 exactness contract for the Pallas path: counts/max/min and
+integer-valued sums are exact; float sums/means regroup the addition
+across row tiles and match to the same tolerance as multi-shard
+merges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.jaxpr_lint import lint_jaxpr, trace_closed_jaxpr
+from repro.analysis.registry import DEFAULT_INVARIANTS
+from repro.kernels.warehouse_agg import FusedAggSpec, fused_segment_agg
+from repro.warehouse import (Filter, GroupBy, MultiGroupBy, SegmentStore,
+                             ShardedStore, TopK, WindowAgg, execute,
+                             execute_ref)
+from repro.warehouse import query as Q
+
+AGGS = ("sum", "mean", "count", "max", "min")
+
+
+def _rows(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "stream_id": rng.integers(0, 6, n).astype(np.int32),
+        "t": np.sort(rng.integers(0, 300, n)).astype(np.int32),
+        "category": rng.integers(0, 5, n).astype(np.int32),
+        "k": rng.integers(0, 3, n).astype(np.int32),
+        "quality": rng.random(n).astype(np.float32),
+        "on_core_s": (rng.random(n) * 20 - 5).astype(np.float32),
+        "cloud_core_s": (rng.random(n) * 5).astype(np.float32),
+        "buffer_s": (rng.random(n) * 40).astype(np.float32),
+        "out": rng.random((n, 3)).astype(np.float32),
+    }
+
+
+def _store(n=130, seed=0):
+    s = SegmentStore(out_dim=3, chunk_rows=48)   # ragged: capacity pad
+    if n:
+        s.append_rows(_rows(n, seed))
+    return s
+
+
+def _check(table, mask, ref, rmask, value, agg, exact_val=None):
+    np.testing.assert_array_equal(np.asarray(mask), rmask)
+    np.testing.assert_array_equal(np.asarray(table["count"]),
+                                  ref["count"])
+    got = np.asarray(table[value], np.float32)
+    want = np.asarray(ref[value], np.float32)
+    assert np.all(np.isfinite(got)), f"non-finite {agg} result leaked"
+    if exact_val if exact_val is not None else agg in ("count", "max",
+                                                       "min"):
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_pallas_groupby_matches_ref(agg):
+    store = _store()
+    plan = (Filter("quality", "ge", 0.3),
+            GroupBy("category", "on_core_s", agg=agg, num_groups=5))
+    ref, rmask = execute_ref(store.host_rows(), store.n_rows, plan)
+    table, mask = execute(store, plan, use_pallas=True)
+    _check(table, mask, ref, rmask, "on_core_s", agg)
+    # and Pallas == XLA under the same contract
+    tx, mx = execute(store, plan, use_pallas=False)
+    _check(tx, mx, ref, rmask, "on_core_s", agg)
+
+
+@pytest.mark.parametrize("agg", ("sum", "mean", "count"))
+def test_pallas_wide_multigroupby(agg):
+    store = _store()
+    plan = (Filter("k", "le", 1),
+            MultiGroupBy(keys=("t", "category"), value="out", agg=agg,
+                         nums=(4, 5), windows=(100, 0)))
+    ref, rmask = execute_ref(store.host_rows(), store.n_rows, plan)
+    table, mask = execute(store, plan, use_pallas=True)
+    _check(table, mask, ref, rmask, "out", agg)
+
+
+def test_pallas_window_with_topk_post():
+    store = _store()
+    plan = (Filter("quality", "ge", 0.4),
+            WindowAgg(window=60, value="quality", agg="mean",
+                      num_windows=6),
+            TopK(3, by="quality"))
+    ref, rmask = execute_ref(store.host_rows(), store.n_rows, plan)
+    table, mask = execute(store, plan, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(mask), rmask)
+    np.testing.assert_array_equal(np.asarray(table["window"]),
+                                  ref["window"])
+    np.testing.assert_allclose(np.asarray(table["quality"]),
+                               ref["quality"], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_multi_block_grid_direct(agg):
+    """Force a many-step grid (block_rows << capacity) on the raw
+    kernel: the revisited-accumulator pattern across tiles."""
+    store = _store(n=140)
+    spec = FusedAggSpec(filters=(("quality", "ge", 0),),
+                        keys=(("category", 5, 0),),
+                        value="buffer_s", agg=agg)
+    _, fvals = Q.normalize((Filter("quality", "ge", 0.25),))
+    part = fused_segment_agg(store.columns, jnp.int32(store.n_rows),
+                             fvals, spec=spec, block_rows=16)
+    out, cnt = Q._seg_finalize(part["acc"], part["cnt"], agg)
+    ref, _ = execute_ref(store.host_rows(), store.n_rows,
+                         (Filter("quality", "ge", 0.25),
+                          GroupBy("category", "buffer_s", agg=agg,
+                                  num_groups=5)))
+    np.testing.assert_array_equal(np.asarray(cnt), ref["count"])
+    if agg in ("count", "max", "min"):
+        np.testing.assert_array_equal(np.asarray(out), ref["buffer_s"])
+    else:
+        np.testing.assert_allclose(np.asarray(out), ref["buffer_s"],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# empty-group contract (satellite: ±inf must never leak)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", AGGS)
+@pytest.mark.parametrize("use_pallas", (False, True))
+def test_empty_group_contract(agg, use_pallas):
+    """A filter that empties a group (and group ids never present at
+    all): 0.0 value, count 0, masked-off row — on single-device XLA,
+    single-device Pallas, and both sharded modes (stacked here;
+    collective pmax/pmin on the forced-8-device leg)."""
+    store = _store()
+    sharded = ShardedStore(out_dim=3, n_shards=2, chunk_rows=48)
+    sharded.append_rows(_rows(130))
+    # category 2 emptied by the filter; groups 5..7 never present
+    plan = (Filter("category", "ne", 2),
+            GroupBy("category", "quality", agg=agg, num_groups=8))
+    ref, rmask = execute_ref(store.host_rows(), store.n_rows, plan)
+    assert ref["count"][2] == 0 and not rmask[2]
+    assert np.all(ref["count"][5:] == 0) and not rmask[5:].any()
+    assert np.all(np.isfinite(ref["quality"]))
+    assert np.all(ref["quality"][[2, 5, 6, 7]] == 0.0)
+    for table, mask in (execute(store, plan, use_pallas=use_pallas),
+                        sharded.query(plan, use_pallas=use_pallas)):
+        _check(table, mask, ref, rmask, "quality", agg)
+
+
+@pytest.mark.parametrize("use_pallas", (False, True))
+def test_all_rows_filtered(use_pallas):
+    """The all-rows-filtered degenerate chunk: every group empty."""
+    store = _store()
+    for agg in AGGS:
+        plan = (Filter("quality", "lt", -5.0),
+                GroupBy("category", "quality", agg=agg, num_groups=5))
+        ref, rmask = execute_ref(store.host_rows(), store.n_rows, plan)
+        assert not rmask.any() and np.all(ref["quality"] == 0.0)
+        table, mask = execute(store, plan, use_pallas=use_pallas)
+        _check(table, mask, ref, rmask, "quality", agg)
+
+
+@pytest.mark.parametrize("use_pallas", (False, True))
+def test_single_group_degenerate(use_pallas):
+    """num_groups=1: the whole store collapses into one accumulator."""
+    store = _store()
+    for agg in AGGS:
+        plan = (GroupBy("k", "quality", agg=agg, num_groups=1),)
+        ref, rmask = execute_ref(store.host_rows(), store.n_rows, plan)
+        table, mask = execute(store, plan, use_pallas=use_pallas)
+        _check(table, mask, ref, rmask, "quality", agg)
+
+
+def test_empty_store_empty_groups():
+    store = _store(n=0)
+    cols = {k: np.asarray(v) for k, v in store.columns.items()}
+    for agg in ("max", "min", "mean"):
+        plan = (GroupBy("category", "quality", agg=agg, num_groups=4),)
+        ref, rmask = execute_ref(cols, 0, plan)
+        assert not rmask.any() and np.all(ref["quality"] == 0.0)
+        for up in (False, True):
+            table, mask = execute((store.columns, 0), plan,
+                                  use_pallas=up)
+            _check(table, mask, ref, rmask, "quality", agg)
+
+
+# ---------------------------------------------------------------------------
+# int_pred exhaustive property coverage (satellite: the ±1 off-by-one)
+# ---------------------------------------------------------------------------
+
+_I32 = 2 ** 31
+_X_EDGE = np.asarray(
+    [-_I32, -_I32 + 1, -7, -6, -5, -2, -1, 0, 1, 2, 5, 6, 7,
+     _I32 - 2, _I32 - 1], np.int32)
+_THRESHOLDS = [
+    -float(_I32) - 0.7, -float(_I32), -_I32 + 0.5, -6.5, -6.0, -5.5,
+    -1.5, -1.0, -0.5, -0.0, 0.0, 0.5, 1.0, 2.5, 5.0, 6.999,
+    _I32 - 1.5, float(_I32 - 1), _I32 - 0.5, float(_I32), _I32 + 0.7,
+    -1e20, 1e20, float("-inf"), float("inf"),
+]
+
+
+@pytest.mark.parametrize("op", ("eq", "ne", "lt", "le", "gt", "ge"))
+def test_int_pred_vs_float64(op):
+    """Every (threshold sign x integrality x in/out of int32 range)
+    bucket against the exact float64 comparison — through the XLA row
+    mask, ``execute_ref``, AND the Pallas kernel's in-register
+    predicate (as a count aggregation)."""
+    cols = {"x": jnp.asarray(_X_EDGE),
+            "g": jnp.zeros(len(_X_EDGE), jnp.int32)}
+    cols_np = {k: np.asarray(v) for k, v in cols.items()}
+    n = len(_X_EDGE)
+    cmp = Q._CMP[op]
+    cache0 = Q.compile_cache_size()
+    for v in _THRESHOLDS:
+        want = cmp(_X_EDGE.astype(np.float64), np.float64(v))
+        fplan = (Filter("x", op, v),)
+        _, mask = Q._run_plan(cols, jnp.int32(n),
+                             Q.normalize(fplan)[1], spec=Q.normalize(
+                                 fplan)[0])
+        np.testing.assert_array_equal(
+            np.asarray(mask), want, err_msg=f"XLA {op} {v!r}")
+        _, rmask = execute_ref(cols_np, n, fplan)
+        np.testing.assert_array_equal(rmask, want,
+                                      err_msg=f"ref {op} {v!r}")
+        gplan = fplan + (GroupBy("g", "x", agg="count", num_groups=1),)
+        table, _ = execute((cols, n), gplan, use_pallas=True)
+        assert int(np.asarray(table["count"])[0]) == int(want.sum()), \
+            f"pallas {op} {v!r}"
+    # thresholds are dynamic operands: the sweep must not recompile
+    # (2 XLA plan shapes + 1 Pallas shape for this op, compiled once)
+    assert Q.compile_cache_size() - cache0 <= 3
+
+
+# ---------------------------------------------------------------------------
+# top-k tie handling (satellite: lax.top_k vs argsort order)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("largest", (True, False))
+def test_topk_duplicate_scores(largest):
+    """Duplicate scores — including the +0.0/-0.0 pair, which IEEE
+    total order (lax.top_k) ranks but plain argsort(-score) treats as
+    equal — must give identical indices, values, and masks."""
+    q = np.asarray([0.5, -0.0, 0.0, 0.5, -0.0, 1.0, 0.0, 0.5, -1.0,
+                    1.0, -0.0, 0.25], np.float32)
+    n = len(q)
+    cols = {"quality": jnp.asarray(q),
+            "t": jnp.arange(n, dtype=jnp.int32)}
+    cols_np = {k: np.asarray(v) for k, v in cols.items()}
+    plan = (TopK(6, by="quality", largest=largest),)
+    ref, rmask = execute_ref(cols_np, n, plan)
+    table, mask = execute((cols, n), plan)
+    np.testing.assert_array_equal(np.asarray(table["index"]),
+                                  ref["index"])
+    np.testing.assert_array_equal(np.asarray(table["quality"]),
+                                  ref["quality"])
+    np.testing.assert_array_equal(np.asarray(mask), rmask)
+
+
+def test_topk_ties_after_aggregation():
+    """Equal aggregated scores (exact int sums) tie-break identically
+    through a GroupBy -> TopK plan."""
+    rows = _rows(120)
+    rows["k"] = (np.arange(120, dtype=np.int32) % 3)
+    rows["category"] = np.zeros(120, np.int32)  # 3 groups, equal counts
+    store = SegmentStore(out_dim=3, chunk_rows=48)
+    store.append_rows(rows)
+    plan = (GroupBy("k", "category", agg="count", num_groups=6),
+            TopK(4, by="category"))
+    ref, rmask = execute_ref(store.host_rows(), store.n_rows, plan)
+    for up in (False, True):
+        table, mask = execute(store, plan, use_pallas=up)
+        np.testing.assert_array_equal(np.asarray(table["index"]),
+                                      ref["index"])
+        np.testing.assert_array_equal(np.asarray(mask), rmask)
+
+
+# ---------------------------------------------------------------------------
+# dispatch, caching, and the scatter census
+# ---------------------------------------------------------------------------
+
+def test_pallas_no_recompile_across_thresholds():
+    store = _store()
+    plan0 = (Filter("quality", "ge", 0.2),
+             GroupBy("category", "quality", agg="mean", num_groups=5))
+    execute(store, plan0, use_pallas=True)
+    cache0 = Q.compile_cache_size()
+    for thr in (0.1, 0.35, 0.6, 0.9):
+        plan = (Filter("quality", "ge", thr),
+                GroupBy("category", "quality", agg="mean", num_groups=5))
+        execute(store, plan, use_pallas=True)
+    assert Q.compile_cache_size() == cache0
+
+
+def test_unsupported_plans_fall_back():
+    """use_pallas=True on plan shapes the fused kernel can't run (pure
+    row plans, TopK reducers) silently uses the XLA path."""
+    store = _store()
+    n = store.n_rows
+    for plan in ((Filter("quality", "ge", 0.5),),
+                 (Filter("quality", "ge", 0.5), TopK(4, by="quality"))):
+        ref, rmask = execute_ref(store.host_rows(), n, plan)
+        table, mask = execute(store, plan, use_pallas=True)
+        # row-level plans keep capacity padding (masked off); compare
+        # the live prefix
+        keep = len(rmask)
+        np.testing.assert_array_equal(np.asarray(mask)[:keep], rmask)
+        assert not np.asarray(mask)[keep:].any()
+        np.testing.assert_array_equal(
+            np.asarray(table["quality"], np.float32)[:keep],
+            ref["quality"])
+
+
+def test_auto_dispatch_is_xla_on_cpu():
+    """The cost-based auto policy never picks interpret-mode Pallas on
+    CPU (it is a correctness path, not a fast path)."""
+    spec, _ = Q.normalize((GroupBy("category", "quality", num_groups=4),))
+    pre, node, _ = Q.split_plan(spec)
+    store = _store(n=10)
+    assert Q._resolve_use_pallas(None, pre, node, store.columns) is False
+    assert Q._resolve_use_pallas(True, pre, node, store.columns) is True
+
+
+def test_scatter_census_zero_on_pallas_path():
+    """THE floor-breaking claim: the groupby plan's XLA path executes
+    >= 1 scatter; the identical plan on the Pallas path executes 0 —
+    and stays clean on every other jaxpr invariant."""
+    store = _store(n=40)
+    spec, fvals = Q.normalize(
+        (Filter("quality", "ge", 0.25),
+         GroupBy("category", "quality", agg="mean", num_groups=5)))
+    args = (store.columns, jnp.int32(store.n_rows), fvals)
+
+    def xla(cols, n, fv):
+        return Q._run_plan(cols, n, fv, spec=spec, use_pallas=False)
+
+    def pallas(cols, n, fv):
+        return Q._run_plan(cols, n, fv, spec=spec, use_pallas=True)
+
+    v, census = lint_jaxpr(trace_closed_jaxpr(xla, args, {}),
+                           DEFAULT_INVARIANTS)
+    assert census["totals"]["scatter_executed"] >= 1
+    v, census = lint_jaxpr(trace_closed_jaxpr(pallas, args, {}),
+                           DEFAULT_INVARIANTS)
+    assert [x["check"] for x in v] == []
+    assert census["totals"]["scatter_executed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# sharded: fused partials inside the shard_map dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_sharded_pallas_partials(agg):
+    """Per-shard fused kernels + the unchanged psum/pmax merge: stacked
+    fallback on 1 device, real collectives on the forced-8-device leg —
+    including a shard whose rows are ALL filtered out (the ∓inf
+    sentinel must survive the cross-shard merge, then zero-fill)."""
+    rows = _rows(160)
+    store = ShardedStore(out_dim=3, n_shards=4, chunk_rows=48)
+    store.append_rows(rows)
+    single = SegmentStore(out_dim=3, chunk_rows=48)
+    single.append_rows(rows)
+    plan = (Filter("on_core_s", "gt", 12.0),
+            GroupBy("stream_id", "on_core_s", agg=agg, num_groups=8))
+    ref, rmask = execute_ref(single.host_rows(), single.n_rows, plan)
+    table, mask = store.query(plan, use_pallas=True)
+    exact = agg in ("count", "max", "min")
+    _check(table, mask, ref, rmask, "on_core_s", agg, exact_val=exact)
