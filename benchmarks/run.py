@@ -1,15 +1,18 @@
 """Run every paper-table/figure benchmark. Prints ``name,us_per_call,
 derived`` CSV rows (one module per paper artifact — see DESIGN.md §6).
 
-    PYTHONPATH=src:. python benchmarks/run.py [only] [--json OUT]
+    PYTHONPATH=src:. python benchmarks/run.py [only] [--json [OUT]]
                                               [--compare OLD.json]
 
-``only`` filters modules by substring. ``--json OUT`` additionally
+``only`` filters modules by substring. ``--json [OUT]`` additionally
 writes a perf snapshot (bench name -> metric dict, with the numeric
 fields of each row's ``derived`` string parsed out) so the repo's bench
-trajectory can be tracked across PRs, e.g.::
+trajectory can be tracked across PRs. OUT defaults to
+``BENCH_HEAD.json`` — the rolling committed baseline; older PR-tagged
+snapshots remain valid ``--compare`` inputs::
 
-    python benchmarks/run.py --json BENCH_PR4.json
+    python benchmarks/run.py --json                  # -> BENCH_HEAD.json
+    python benchmarks/run.py --json BENCH_NEW.json --compare BENCH_HEAD.json
 
 ``--compare OLD.json`` loads a prior snapshot after the run, prints the
 per-metric deltas, and exits non-zero if any FLOOR metric (a metric
@@ -193,8 +196,14 @@ def main() -> None:
     for flag in ("--json", "--compare"):
         if flag in args:
             i = args.index(flag)
-            if i + 1 >= len(args):
-                sys.exit(f"usage: run.py [only] [--json OUT] "
+            if i + 1 >= len(args) or args[i + 1].startswith("--"):
+                # --json defaults to the rolling head snapshot; --compare
+                # has no sensible default (the baseline is the input)
+                if flag == "--json":
+                    json_out = "BENCH_HEAD.json"
+                    del args[i:i + 1]
+                    continue
+                sys.exit(f"usage: run.py [only] [--json [OUT]] "
                          f"[--compare OLD.json] — missing {flag} value")
             if flag == "--json":
                 json_out = args[i + 1]

@@ -3,12 +3,15 @@
 #
 #   scripts/tier1.sh [--bench-smoke] [extra pytest args...]
 #
-# Two legs:
+# Legs:
 #   1. the full suite on the default (single-device) topology;
-#   2. the sharded-warehouse suite re-run under a forced 8-device host
+#   2. static program audit + obs dispatch-trace smoke vs the committed
+#      ANALYSIS.json / OBS.json baselines;
+#   3. the sharded-warehouse suite re-run under a forced 8-device host
 #      platform, where ShardedStore gets a real ('shard',) mesh and
 #      queries/ingests execute as ONE shard_map dispatch with collective
-#      merges (on one device the same tests cover the stacked fallback).
+#      merges (on one device the same tests cover the stacked fallback),
+#      plus the audit and obs smoke on that topology.
 #
 # --bench-smoke additionally runs the fused-ingest, warehouse, sharded-
 # warehouse, and multi-stream benchmarks in their --tiny configurations
@@ -44,6 +47,16 @@ AUDIT_OUT="$(mktemp)"
 python -m repro.analysis --json "$AUDIT_OUT" --compare ANALYSIS.json
 rm -f "$AUDIT_OUT"
 
+echo "== obs dispatch-trace smoke vs OBS.json =="
+# trace every registry engine (1 warm rep), validate the Chrome trace,
+# and gate vs the committed baseline: any new executable / recompile /
+# host transfer fails; span-time floors only gate above the noise floor
+OBS_OUT="$(mktemp)"
+OBS_TRACE="$(mktemp)"
+python -m repro.obs --smoke --json "$OBS_OUT" --trace "$OBS_TRACE" \
+  --compare OBS.json
+rm -f "$OBS_OUT" "$OBS_TRACE"
+
 echo "== sharded warehouse suite on 8 forced host devices =="
 # appended last: XLA flag parsing is last-wins, so this overrides any
 # device-count already in XLA_FLAGS (e.g. CI's =1) for this leg only
@@ -60,6 +73,16 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   python -m repro.analysis --json "$AUDIT_OUT"
 rm -f "$AUDIT_OUT"
 
+echo "== obs dispatch-trace smoke on 8 forced host devices =="
+# --compare on a different topology skips per-engine gates but still
+# proves the tracer runs (and the trace validates) with real collectives
+OBS_OUT="$(mktemp)"
+OBS_TRACE="$(mktemp)"
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+  python -m repro.obs --smoke --json "$OBS_OUT" --trace "$OBS_TRACE" \
+    --compare OBS.json
+rm -f "$OBS_OUT" "$OBS_TRACE"
+
 if [[ "$BENCH_SMOKE" == "1" ]]; then
   for bench in fused_ingest_bench warehouse_bench sharded_warehouse_bench \
                multi_stream_bench; do
@@ -67,4 +90,6 @@ if [[ "$BENCH_SMOKE" == "1" ]]; then
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
       python "benchmarks/${bench}.py" --tiny
   done
+  echo "== bench smoke: examples/vetl_observe.py (tiny traced run) =="
+  python examples/vetl_observe.py
 fi

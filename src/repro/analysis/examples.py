@@ -147,6 +147,19 @@ def fused_multi():
         {"with_traces": True})
 
 
+def fused_single_telemetry():
+    """``fused_single`` with the flight recorder threaded through the
+    carry — the auditor proves the telemetry variant is still one
+    executable with no host transfers."""
+    ex = fused_single()
+    return EngineExample(ex.fn, ex.args, dict(ex.kwargs, telemetry=True))
+
+
+def fused_multi_telemetry():
+    ex = fused_multi()
+    return EngineExample(ex.fn, ex.args, dict(ex.kwargs, telemetry=True))
+
+
 # ---- serving pool ----------------------------------------------------------
 
 def pool_replan():

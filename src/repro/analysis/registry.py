@@ -52,6 +52,7 @@ class Engine(NamedTuple):
     invariants: Mapping[str, Any]
     probe: Optional[Callable[[], int]]
     covers: Tuple[str, ...]
+    probe_name: Optional[str] = None
 
 
 # What a registered engine promises unless it overrides. These are the
@@ -98,18 +99,24 @@ _ENGINES: Dict[str, Engine] = {}
 def register_engine(name: str, build: Callable[[], EngineExample], *,
                     invariants: Optional[Mapping[str, Any]] = None,
                     probe: Optional[Callable[[], int]] = None,
-                    covers: Tuple[str, ...] = ()) -> None:
+                    covers: Tuple[str, ...] = (),
+                    probe_name: Optional[str] = None) -> None:
     """Register a jitted engine for static verification. ``invariants``
     overrides individual ``DEFAULT_INVARIANTS`` keys; ``probe`` is the
     engine's jit-cache probe (the same callable handed to
     ``register_cache_probe``); ``covers`` names the module-level jitted
-    definitions this entry exercises."""
+    definitions this entry exercises; ``probe_name`` is the
+    ``register_cache_probe`` key this engine's probe corresponds to —
+    the coverage lint cross-references the probe table against the
+    union of all engines' probe names, so a probe nobody claims (or an
+    engine claiming a nonexistent probe) fails the audit."""
     inv = dict(DEFAULT_INVARIANTS)
     if invariants:
         unknown = set(invariants) - set(DEFAULT_INVARIANTS)
         assert not unknown, f"unknown invariants: {sorted(unknown)}"
         inv.update(invariants)
-    _ENGINES[name] = Engine(name, build, inv, probe, tuple(covers))
+    _ENGINES[name] = Engine(name, build, inv, probe, tuple(covers),
+                            probe_name)
 
 
 def example_builder(name: str, *args: Any) -> Callable[[], EngineExample]:
@@ -133,6 +140,13 @@ def covered_jit_names() -> set:
     for e in _ENGINES.values():
         out.update(e.covers)
     return out
+
+
+def claimed_probe_names() -> set:
+    """Union of every registered engine's ``probe_name`` — the cache
+    probes the registry actually verifies dispatch counts through."""
+    return {e.probe_name for e in _ENGINES.values()
+            if e.probe_name is not None}
 
 
 def import_engine_modules() -> None:

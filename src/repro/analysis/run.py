@@ -98,6 +98,48 @@ def audit_engine(engine: registry.Engine) -> Dict:
     return record
 
 
+def coverage_violations() -> List[Dict]:
+    """Cross-reference the three observability registries (satellite of
+    the obs PR — a counter that exists but is never audited or traced is
+    a blind spot, so all three must agree):
+
+    - every ``register_cache_probe`` site must be claimed by at least
+      one registry engine via ``probe_name=`` (``probe_without_engine``),
+    - every ``probe_name`` must point at a probe that actually exists
+      (``unknown_probe_name`` — catches typos and renames),
+    - every registered engine must be traceable by ``repro.obs``
+      (``untraced_engine`` — i.e. it has a probe).
+    """
+    # deferred imports: switcher/obs both (transitively) import this
+    # package's registry at module scope
+    from repro.core.switcher import _CACHE_PROBES
+    from repro.obs.trace import traceable_engine_names
+
+    registry.import_engine_modules()
+    violations: List[Dict] = []
+    probes = set(_CACHE_PROBES)
+    claimed = registry.claimed_probe_names()
+    for name in sorted(probes - claimed):
+        violations.append({
+            "pass": "coverage", "check": "probe_without_engine",
+            "detail": "cache probe has no registry engine claiming it "
+                      "via probe_name= (recompiles there are invisible "
+                      "to the auditor and the obs tracer)",
+            "path": name})
+    for name in sorted(claimed - probes):
+        violations.append({
+            "pass": "coverage", "check": "unknown_probe_name",
+            "detail": "engine probe_name= does not match any "
+                      "register_cache_probe site", "path": name})
+    traced = traceable_engine_names()
+    for name in sorted(set(registry.engines()) - traced):
+        violations.append({
+            "pass": "coverage", "check": "untraced_engine",
+            "detail": "registered engine is invisible to the obs "
+                      "tracer (no jit-cache probe)", "path": name})
+    return violations
+
+
 def run_audit(only: Optional[str] = None, skip_source: bool = False
               ) -> Dict:
     registry.import_engine_modules()
@@ -126,6 +168,9 @@ def run_audit(only: Optional[str] = None, skip_source: bool = False
         report["source"] = {"violations": src_v,
                             "jit_defs": sorted(jit_defs)}
         report["violations"].extend(src_v)
+        cov_v = coverage_violations()
+        report["coverage"] = {"violations": cov_v}
+        report["violations"].extend(cov_v)
 
     report["n_violations"] = len(report["violations"])
     return report

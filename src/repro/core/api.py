@@ -199,10 +199,12 @@ register_cache_probe("pool_replan", lambda: _pool_replan._cache_size())
 register_cache_probe("pool_shift", lambda: _pool_shift._cache_size())
 register_engine("pool_replan", example_builder("pool_replan"),
                 probe=lambda: _pool_replan._cache_size(),
-                covers=("repro.core.api:_pool_replan",))
+                covers=("repro.core.api:_pool_replan",),
+                probe_name="pool_replan")
 register_engine("pool_shift", example_builder("pool_shift"),
                 probe=lambda: _pool_shift._cache_size(),
-                covers=("repro.core.api:_pool_shift",))
+                covers=("repro.core.api:_pool_shift",),
+                probe_name="pool_shift")
 
 
 class SkyscraperPool:
@@ -225,9 +227,17 @@ class SkyscraperPool:
     the device, plus the measured quality reported by the Transform. A
     ``warehouse.ShardedStore`` sink routes stream ``v``'s row to shard
     ``v % n_shards`` inside the same tick dispatch.
+
+    ``telemetry=True`` attaches the serving-loop flight recorder: a
+    host-side sequential float32 accumulator (``repro.obs``'s
+    ``HostTelemetry``) fed from the per-tick outs the pool already
+    pulls to host for the Transform — zero extra device dispatches,
+    and the same bit-exactness contract as the fused engines' carried
+    counters. Read it with ``pool.telemetry()``.
     """
 
-    def __init__(self, sky: Skyscraper, n_streams: int, sink=None):
+    def __init__(self, sky: Skyscraper, n_streams: int, sink=None,
+                 telemetry: bool = False):
         assert sky._fitted, "fit() the Skyscraper first"
         self.sky = sky
         self.V = n_streams
@@ -241,6 +251,16 @@ class SkyscraperPool:
         self._alpha = jnp.broadcast_to(
             sky.alpha, (n_streams,) + sky.alpha.shape)
         self._seen = 0
+        self._tel = None
+        if telemetry:
+            from repro.obs.telemetry import HostTelemetry
+            k0 = int(np.argmin(np.asarray(sky.tables.rank_pos)))
+            self._tel = HostTelemetry(n_streams, k0)
+
+    def telemetry(self):
+        """Snapshot of the pool's flight recorder (``repro.obs``'s
+        ``Telemetry``), or None when constructed without one."""
+        return None if self._tel is None else self._tel.snapshot()
 
     def _replan(self):
         """Per-stream plans from each stream's OWN recorded categories
@@ -254,6 +274,8 @@ class SkyscraperPool:
             sky.tables.cost, jnp.float32(budget),
             jnp.asarray(self._seen >= self._hist_len),
             n_split=sky.n_split, interval=sky.interval)
+        if self._tel is not None:
+            self._tel.replans += 1
 
     def process(self, segments, arrival_mults: Optional[Sequence] = None):
         """One batched switch decision + per-stream Transform execution.
@@ -277,6 +299,8 @@ class SkyscraperPool:
                              "category": int(np.asarray(outs["c"])[v]),
                              "quality": float(q),
                              "buffer_s": float(np.asarray(outs["buffer_s"])[v])})
+        if self._tel is not None:
+            self._tel.update(outs)
         # report measured qualities back (drive the next classification)
         q_dev = jnp.asarray(q_meas)
         self.state["qual_prev"] = q_dev

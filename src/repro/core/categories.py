@@ -77,10 +77,13 @@ register_cache_probe("categories", lambda: (_lloyd_step._cache_size()
                                             + classify_1d._cache_size()))
 register_engine("kmeans_lloyd", example_builder("lloyd_step"),
                 probe=lambda: _lloyd_step._cache_size(),
-                covers=("repro.core.categories:_lloyd_step",))
+                covers=("repro.core.categories:_lloyd_step",),
+                probe_name="categories")
 register_engine("classify_full", example_builder("classify_full"),
                 probe=lambda: classify_full._cache_size(),
-                covers=("repro.core.categories:classify_full",))
+                covers=("repro.core.categories:classify_full",),
+                probe_name="categories")
 register_engine("classify_1d", example_builder("classify_1d"),
                 probe=lambda: classify_1d._cache_size(),
-                covers=("repro.core.categories:classify_1d",))
+                covers=("repro.core.categories:classify_1d",),
+                probe_name="categories")

@@ -82,7 +82,8 @@ from repro.core.switcher import register_cache_probe  # noqa: E402
 register_cache_probe("forecaster_adam", lambda: _adam_step._cache_size())
 register_engine("forecaster_adam", example_builder("adam_step"),
                 probe=lambda: _adam_step._cache_size(),
-                covers=("repro.core.forecaster:_adam_step",))
+                covers=("repro.core.forecaster:_adam_step",),
+                probe_name="forecaster_adam")
 
 
 def train_forecaster(params, X, Y, *, epochs: int = 40, lr: float = 3e-3,

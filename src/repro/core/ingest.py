@@ -34,6 +34,8 @@ from repro.core.switcher import (SwitchTables, init_state, init_state_multi,
                                  run_window_multi, stack_tables, window_scan,
                                  window_scan_multi)
 from repro.data.stream import Stream
+from repro.obs.telemetry import (Telemetry, tel_init, window_scan_multi_tel,
+                                 window_scan_tel)
 
 CLOUD_PREMIUM = 1.8      # App. L
 
@@ -51,6 +53,7 @@ class RunResult:
     k_trace: np.ndarray = None
     buffer_trace: np.ndarray = None
     plans: List = field(default_factory=list)
+    telemetry: Optional[Telemetry] = None
 
     @property
     def quality_pct(self) -> float:
@@ -176,10 +179,13 @@ def run_skyscraper(fitted: Fitted, stream: Stream, *, n_cores: int,
                             plans)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "n_split", "interval"))
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "n_split", "interval",
+                                    "telemetry"))
 def _fused_run(state, buf, quals_w, arrs_w, valid_w, wts, fracs, tables,
                centers, cost, params, core_s_per_seg, cloud_budget, *,
-               mode: str, n_split: int, interval: int):
+               mode: str, n_split: int, interval: int,
+               telemetry: bool = False):
     """The whole online phase as ONE compiled program: an outer scan over
     planning windows; each body = forecast -> LP -> inner window scan.
 
@@ -188,12 +194,22 @@ def _fused_run(state, buf, quals_w, arrs_w, valid_w, wts, fracs, tables,
     run (the cloud ration). ``buf`` is the rolling label buffer feeding
     the forecaster ("model" mode); the label bincounts that the host loop
     kept in numpy live entirely in the carry.
+
+    ``telemetry`` (static) threads the flight-recorder counter pytree
+    through the carry and snapshots it at every window boundary (an
+    extra ys leaf) — still one dispatch. False keeps every branch below
+    on the pre-telemetry code path, so the no-telemetry program traces
+    to the exact same jaxpr as before the flag existed (the census
+    equality test pins this).
     """
     C = centers.shape[0]
     need = n_split * interval
 
     def body(carry, xs):
-        st, buf, n_seen = carry
+        if telemetry:
+            st, buf, n_seen, tel = carry
+        else:
+            st, buf, n_seen = carry
         q_w, a_w, valid, w_t, frac = xs
         w_tf = w_t.astype(jnp.float32)
         # ---- forecast r (category distribution over the window) -------
@@ -214,15 +230,26 @@ def _fused_run(state, buf, quals_w, arrs_w, valid_w, wts, fracs, tables,
             cloud_left=cloud_budget - st["cloud_spent"],
             frac=frac, window_len=w_tf, cloud_premium=CLOUD_PREMIUM)
         # ---- reactive switching (the PR-1 window body, inlined) -------
-        st, outs = window_scan(st, q_w, a_w, valid, alpha, tables)
+        if telemetry:
+            (st, tel), outs = window_scan_tel(st, tel, q_w, a_w, valid,
+                                              alpha, tables)
+        else:
+            st, outs = window_scan(st, q_w, a_w, valid, alpha, tables)
         # ---- roll the W_t real labels into the history buffer ---------
         # (only the forecaster reads it; mode is static, so the roll
         # disappears from the oracle/uniform programs at trace time)
         if mode == "model":
             cat = jnp.concatenate([buf, outs["c"].astype(jnp.int32)])
             buf = jax.lax.dynamic_slice(cat, (w_t,), (need,))
+        if telemetry:
+            return (st, buf, n_seen + w_t, tel), (outs, r, alpha, tel)
         return (st, buf, n_seen + w_t), (outs, r, alpha)
 
+    if telemetry:
+        (state, _, _, _), (outs, rs, alphas, tels) = jax.lax.scan(
+            body, (state, buf, jnp.int32(0), tel_init(state)),
+            (quals_w, arrs_w, valid_w, wts, fracs))
+        return state, outs, rs, alphas, tels
     (state, _, _), (outs, rs, alphas) = jax.lax.scan(
         body, (state, buf, jnp.int32(0)),
         (quals_w, arrs_w, valid_w, wts, fracs))
@@ -232,7 +259,17 @@ def _fused_run(state, buf, quals_w, arrs_w, valid_w, wts, fracs, tables,
 register_cache_probe("fused_single", lambda: _fused_run._cache_size())
 register_engine("fused_single", example_builder("fused_single"),
                 probe=lambda: _fused_run._cache_size(),
-                covers=("repro.core.ingest:_fused_run",))
+                covers=("repro.core.ingest:_fused_run",),
+                probe_name="fused_single")
+# telemetry=True variant: own jit cache entry (static flag), still one
+# dispatch — audited separately so the flight recorder can never
+# silently grow a second executable or a host transfer
+register_engine("fused_single_telemetry",
+                example_builder("fused_single_telemetry"),
+                probe=lambda: _fused_run._cache_size(),
+                covers=("repro.core.ingest:_fused_run",
+                        "repro.obs.telemetry:window_scan_tel"),
+                probe_name="fused_single")
 
 
 def fused_cache_size() -> int:
@@ -259,7 +296,8 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
                          plan_days: Optional[float] = None,
                          forecast_mode: str = "model",
                          seed: int = 0, sink=None, sink_stream_id: int = 0,
-                         sink_t0: int = 0) -> RunResult:
+                         sink_t0: int = 0,
+                         telemetry: bool = False) -> RunResult:
     """``run_skyscraper`` as one dispatch: same planning windows, same
     forecasts, same LP, same switcher — fused into a single outer scan
     (results match the windowed loop to float32 tolerance). No
@@ -272,7 +310,13 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
     its still-device-resident stacked traces (plus the (T, K)
     measured-quality vectors as the per-segment output column) straight
     to ``sink.ingest_fused``, so ingestion -> store is zero per-segment
-    host transfers."""
+    host transfers.
+
+    ``telemetry=True`` attaches the flight recorder: the run's
+    ``RunResult.telemetry`` carries cumulative + per-window counters
+    (drops, buffer high-water mark, on-prem/cloud core-seconds, config
+    switches), accumulated inside the same single dispatch and
+    bit-exact against ``repro.obs.telemetry_ref``."""
     w = fitted.workload
     tau = w.segment_seconds
     plan_days = plan_days or fitted.horizon_segments * tau / 86400
@@ -291,13 +335,19 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
                      constant_values=1.0).reshape(n_w, W)
     valid_w = (jnp.arange(n_w * W) < T).reshape(n_w, W)
     need = fitted.interval_segments * fitted.n_split
-    state, outs, rs, alphas = _fused_run(
+    fused = _fused_run(
         init_state(tables), jnp.zeros((need,), jnp.int32), quals_w, arrs_w,
         valid_w, jnp.asarray(wts), jnp.asarray(fracs), tables, centers,
         cost, fitted.forecaster if forecast_mode == "model" else None,
         jnp.float32(n_cores * tau), jnp.float32(cloud_budget_core_s),
         mode=forecast_mode, n_split=fitted.n_split,
-        interval=fitted.interval_segments)
+        interval=fitted.interval_segments, telemetry=telemetry)
+    if telemetry:
+        state, outs, rs, alphas, tels = fused
+        tel = Telemetry.from_device(tels)
+    else:
+        state, outs, rs, alphas = fused
+        tel = None
     if sink is not None:
         # Load: the stacked (n_w, W) traces and the (T, K) quality
         # vectors never leave the device on their way into the store
@@ -308,8 +358,10 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
     cat = {k: np.asarray(v).reshape((n_w * W,) + v.shape[2:])[:T]
            for k, v in outs.items()}
     rs, alphas = np.asarray(rs), np.asarray(alphas)
-    return _assemble_result(cat, _max_quality(stream, fitted.power), K,
-                            [(rs[i], alphas[i]) for i in range(n_w)])
+    res = _assemble_result(cat, _max_quality(stream, fitted.power), K,
+                           [(rs[i], alphas[i]) for i in range(n_w)])
+    res.telemetry = tel
+    return res
 
 
 def _multi_prep(fitteds, streams, *, buffer_gb, cloud_budget_core_s, seed):
@@ -342,10 +394,10 @@ def _multi_prep(fitteds, streams, *, buffer_gb, cloud_budget_core_s, seed):
     return V, T, K, Cs, C_max, tables, quals, arrs, qmax
 
 
-@functools.partial(jax.jit, static_argnames=("with_traces",))
+@functools.partial(jax.jit, static_argnames=("with_traces", "telemetry"))
 def _fused_run_multi(state, quals_w, arrs_w, valid_w, wts, tables,
                      cost, core_s_total, cloud_ration, *,
-                     with_traces: bool = False):
+                     with_traces: bool = False, telemetry: bool = False):
     """Whole multi-stream run as one program: outer scan over windows;
     each body = per-stream oracle forecast -> joint stacked LP -> the
     batched V-stream window scan. quals_w (n_w, V, W, K); arrs_w/valid_w
@@ -353,10 +405,18 @@ def _fused_run_multi(state, quals_w, arrs_w, valid_w, wts, tables,
     ``with_traces`` (a warehouse sink is attached), the full per-segment
     traces ((n_w, V, W) leaves, padding zeroed); otherwise just the
     per-window per-stream quality sums (n_w, V), so sink-less runs never
-    materialize V*T traces they would discard."""
+    materialize V*T traces they would discard.
+
+    ``telemetry`` (static) adds the per-stream (V,) counter pytree to
+    the carry plus its window-boundary snapshots to the ys — the False
+    path is byte-identical to the pre-flag program."""
     centers = tables.centers                              # (V, C_max, K)
 
-    def body(st, xs):
+    def body(carry, xs):
+        if telemetry:
+            st, tel = carry
+        else:
+            st = carry
         q_w, a_w, valid, w_t = xs
         # per-stream oracle r over the window (App. D Eq. 7-9)
         r = _oracle_rate(q_w, centers, valid, w_t.astype(jnp.float32))
@@ -364,16 +424,32 @@ def _fused_run_multi(state, quals_w, arrs_w, valid_w, wts, tables,
         # the evenly-rationed premium-discounted cloud budget
         alpha = solve_lp_stacked(centers, cost, r,
                                  core_s_total + cloud_ration)
+        if telemetry:
+            (st, tel), outs = window_scan_multi_tel(st, tel, q_w, a_w,
+                                                    valid, alpha, tables)
+            res = outs if with_traces else outs["qual"].sum(axis=1)
+            return (st, tel), (res, tel)
         st, outs = window_scan_multi(st, q_w, a_w, valid, alpha, tables)
         return st, (outs if with_traces else outs["qual"].sum(axis=1))
 
-    return jax.lax.scan(body, state, (quals_w, arrs_w, valid_w, wts))
+    if telemetry:
+        carry0 = (state, tel_init(state))
+    else:
+        carry0 = state
+    return jax.lax.scan(body, carry0, (quals_w, arrs_w, valid_w, wts))
 
 
 register_cache_probe("fused_multi", lambda: _fused_run_multi._cache_size())
 register_engine("fused_multi", example_builder("fused_multi"),
                 probe=lambda: _fused_run_multi._cache_size(),
-                covers=("repro.core.ingest:_fused_run_multi",))
+                covers=("repro.core.ingest:_fused_run_multi",),
+                probe_name="fused_multi")
+register_engine("fused_multi_telemetry",
+                example_builder("fused_multi_telemetry"),
+                probe=lambda: _fused_run_multi._cache_size(),
+                covers=("repro.core.ingest:_fused_run_multi",
+                        "repro.obs.telemetry:window_scan_multi_tel"),
+                probe_name="fused_multi")
 
 
 def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
@@ -381,7 +457,7 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
                          buffer_gb: float = 4.0,
                          plan_days: float = 0.25, seed: int = 0,
                          sink=None, sink_stream_base: int = 0,
-                         sink_t0: int = 0):
+                         sink_t0: int = 0, telemetry: bool = False):
     """Multi-stream ingestion (paper App. D, scenario 1): each stream has
     its own cores + buffer; the cloud budget and the knob PLAN are joint —
     one LP over all streams' categories so the shared budget flows to the
@@ -400,6 +476,10 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
     ``warehouse.ShardedStore`` sink routes each stream's whole trace to
     shard ``(sink_stream_base + v) % n_shards`` in the same single
     dispatch, without gathering anything through the host.
+
+    ``telemetry=True`` adds a ``"telemetry"`` key to the result dict: a
+    ``repro.obs.Telemetry`` with per-stream (V,) counters accumulated
+    in the same single dispatch, bit-exact vs ``telemetry_ref``.
     """
     tau = fitteds[0].workload.segment_seconds
     W = max(1, int(plan_days * 86400 / tau))
@@ -413,13 +493,18 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
         .reshape(V, n_w, W).transpose(1, 0, 2)            # (n_w, V, W)
     valid_w = jnp.broadcast_to((jnp.arange(n_w * W) < T).reshape(n_w, 1, W),
                                (n_w, V, W))
-    _, res = _fused_run_multi(
+    _, ys = _fused_run_multi(
         init_state_multi(tables), quals_w, arrs_w, valid_w,
         jnp.asarray(wts), stack_tables(tables),
         jnp.asarray(fitteds[0].cost, jnp.float32),
         jnp.float32(V * n_cores_each * tau),
         jnp.float32(cloud_budget_core_s / (CLOUD_PREMIUM * max(T, 1))),
-        with_traces=sink is not None)
+        with_traces=sink is not None, telemetry=telemetry)
+    if telemetry:
+        res, tels = ys
+        tel = Telemetry.from_device(tels)
+    else:
+        res, tel = ys, None
     if sink is not None:
         sink.ingest_fused_multi(res, quals, stream_base=sink_stream_base,
                                 t0=sink_t0)
@@ -428,8 +513,12 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
         sums = np.asarray(res["qual"]).sum(axis=(0, 2))
     else:
         sums = np.asarray(res).sum(axis=0)
-    return {"quality_pct": 100.0 * sums.sum() / max(qmax.sum(), 1e-9),
-            "per_stream_pct": (100.0 * sums / np.maximum(qmax, 1e-9)).tolist()}
+    out = {"quality_pct": 100.0 * sums.sum() / max(qmax.sum(), 1e-9),
+           "per_stream_pct": (100.0 * sums
+                              / np.maximum(qmax, 1e-9)).tolist()}
+    if telemetry:
+        out["telemetry"] = tel
+    return out
 
 
 def run_skyscraper_multi_windowed(fitteds, streams, *, n_cores_each: int,

@@ -108,7 +108,8 @@ from repro.core.switcher import register_cache_probe  # noqa: E402
 register_cache_probe("planner_lp", lambda: solve_lp_lagrangian._cache_size())
 register_engine("lp_lagrangian", example_builder("lp_lagrangian"),
                 probe=lambda: solve_lp_lagrangian._cache_size(),
-                covers=("repro.core.planner:solve_lp_lagrangian",))
+                covers=("repro.core.planner:solve_lp_lagrangian",),
+                probe_name="planner_lp")
 
 
 def solve_lp_rationed(qual, cost, r, *, core_s_per_segment, cloud_left,

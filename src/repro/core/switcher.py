@@ -314,13 +314,17 @@ from repro.analysis.registry import example_builder, register_engine  # noqa: E4
 
 register_engine("switch_step", example_builder("switch_step"),
                 probe=_CACHE_PROBES["switch_step"],
-                covers=("repro.core.switcher:_switch_jit",))
+                covers=("repro.core.switcher:_switch_jit",),
+                probe_name="switch_step")
 register_engine("switch_step_multi", example_builder("switch_step_multi"),
                 probe=_CACHE_PROBES["switch_step_multi"],
-                covers=("repro.core.switcher:_switch_multi_jit",))
+                covers=("repro.core.switcher:_switch_multi_jit",),
+                probe_name="switch_step_multi")
 register_engine("run_window", example_builder("run_window"),
                 probe=_CACHE_PROBES["run_window"],
-                covers=("repro.core.switcher:_run_window",))
+                covers=("repro.core.switcher:_run_window",),
+                probe_name="run_window")
 register_engine("run_window_multi", example_builder("run_window_multi"),
                 probe=_CACHE_PROBES["run_window_multi"],
-                covers=("repro.core.switcher:_run_window_multi",))
+                covers=("repro.core.switcher:_run_window_multi",),
+                probe_name="run_window_multi")

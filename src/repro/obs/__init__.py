@@ -1,0 +1,20 @@
+"""Observability: on-device run telemetry + host-side dispatch tracing.
+
+Two layers (see ISSUE 8 / README "Observability"):
+
+1. **Telemetry** — a fixed-shape counter pytree threaded through the
+   fused engines' scan carries (``telemetry=True``), bit-exact against
+   the ``telemetry_ref`` numpy mirror, adding zero dispatches and zero
+   recompiles to the warm path (an auditor-pinned invariant).
+2. **Tracing** — ``python -m repro.obs`` wraps every analysis-registry
+   engine in wall-clock spans with jit-cache-probe recompile
+   accounting, emits Chrome-trace JSON, and gates ``OBS.json``
+   regressions exactly like ``ANALYSIS.json``/``BENCH_*.json``.
+"""
+from repro.obs.telemetry import (HostTelemetry, StoreTelemetry, Telemetry,
+                                 TEL_KEYS, telemetry_ref)
+from repro.obs.trace import traceable_engine_names, validate_chrome_trace
+
+__all__ = ["HostTelemetry", "StoreTelemetry", "Telemetry", "TEL_KEYS",
+           "telemetry_ref", "traceable_engine_names",
+           "validate_chrome_trace"]

@@ -1,0 +1,5 @@
+import sys
+
+from repro.obs.run import main
+
+sys.exit(main())

@@ -1,0 +1,171 @@
+"""``python -m repro.obs`` — the observability report driver.
+
+Traces every registry engine (see ``repro.obs.trace``), writes
+
+- ``OBS.json``      aggregated per-engine metrics (committed baseline),
+- ``OBS_TRACE.json`` the Chrome-trace span timeline (open in
+  ``chrome://tracing`` or Perfetto; regenerated, not committed),
+
+and with ``--compare OLD.json`` exits non-zero on regressions —
+mirroring the ``ANALYSIS.json`` / ``BENCH_*.json`` gating pattern:
+
+- **ceilings** (structural, host-independent, zero headroom): a warm
+  recompile, a host-transfer op, or extra executables vs baseline;
+- **span-time floors** (timings, host-class-gated like the bench
+  floors): a span that slowed >20% vs baseline fails — but only when
+  both snapshots come from the same host class AND the baseline span
+  is above ``SPAN_FLOOR_US`` (micro-spans are pure noise);
+- a baseline engine that disappears (or degrades to skipped) fails —
+  a gate that goes green when its engine vanishes is no gate.
+
+Topology changes (e.g. the forced-8-device tier1 leg) skip per-engine
+numeric gates, exactly like the analysis compare.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+import jax
+
+from repro.obs.trace import trace_all
+
+SCHEMA = 1
+SPAN_FLOOR_US = 5000.0       # gate span growth only above this baseline
+SPAN_GROWTH = 0.20           # >20% slower than baseline fails
+_CEILINGS = ("new_executables", "recompiles", "host_transfers")
+
+
+def run_obs(only=None, reps: int = 3, with_hlo: bool = True) -> Dict:
+    """Trace the registry; return ``(report, chrome_trace)``."""
+    records, trace = trace_all(only=only, reps=reps, with_hlo=with_hlo)
+    report = {
+        "schema": SCHEMA,
+        "topology": {"n_devices": jax.device_count()},
+        "host": {"host_cores": float(os.cpu_count() or 1)},
+        "engines": records,
+        "n_engines": len(records),
+        "n_skipped": sum(1 for r in records.values() if "skipped" in r),
+    }
+    return report, trace
+
+
+def compare(new: Dict, old: Dict) -> List[str]:
+    """Regressions of ``new`` vs a committed ``OBS.json`` baseline."""
+    regressions: List[str] = []
+    if new.get("topology") != old.get("topology"):
+        print(f"[obs] topology changed {old.get('topology')} -> "
+              f"{new.get('topology')}; skipping per-engine gates",
+              file=sys.stderr)
+        return regressions
+    old_cores = old.get("host", {}).get("host_cores")
+    new_cores = new.get("host", {}).get("host_cores")
+    same_host = (old_cores is None or new_cores is None
+                 or old_cores == new_cores)
+    if not same_host:
+        print(f"[obs] host class changed ({old_cores:.0f} -> "
+              f"{new_cores:.0f} cores): span floors advisory, "
+              f"ceilings still gated", file=sys.stderr)
+    for name, old_rec in sorted(old.get("engines", {}).items()):
+        if "skipped" in old_rec:
+            continue
+        new_rec = new.get("engines", {}).get(name)
+        if new_rec is None:
+            regressions.append(f"engine {name!r} disappeared from trace")
+            continue
+        if "skipped" in new_rec:
+            regressions.append(
+                f"engine {name!r} now skipped: {new_rec['skipped']}")
+            continue
+        for key in _CEILINGS:
+            ov, nv = old_rec.get(key), new_rec.get(key)
+            if isinstance(ov, (int, float)) \
+                    and isinstance(nv, (int, float)) and nv > ov:
+                regressions.append(
+                    f"{name}: {key} grew {ov} -> {nv} [ceiling]")
+        ov, nv = old_rec.get("span_us"), new_rec.get("span_us")
+        if same_host and isinstance(ov, (int, float)) \
+                and isinstance(nv, (int, float)) \
+                and ov >= SPAN_FLOOR_US \
+                and nv > ov * (1.0 + SPAN_GROWTH):
+            regressions.append(
+                f"{name}: span_us slowed {ov:.0f} -> {nv:.0f} "
+                f"(>{SPAN_GROWTH:.0%}) [floor]")
+    return regressions
+
+
+def _summary(report: Dict) -> str:
+    lines = [f"obs: {report['n_engines']} engines traced "
+             f"({report['n_skipped']} skipped, "
+             f"{report['topology']['n_devices']} devices)"]
+    for name, rec in report["engines"].items():
+        if "skipped" in rec:
+            lines.append(f"  {name:30s} SKIP ({rec['skipped']})")
+            continue
+        lines.append(
+            f"  {name:30s} span={rec['span_us']:9.1f}us "
+            f"cold={rec['cold_us']:10.1f}us "
+            f"exec+{rec['new_executables']} "
+            f"recompile={rec['recompiles']} "
+            f"hosttx={rec.get('host_transfers', '?')} "
+            f"out={rec['out_bytes']}B")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="dispatch tracer over every registered engine: "
+                    "Chrome-trace spans + regression-gated OBS.json")
+    ap.add_argument("--json", default="OBS.json",
+                    help="report path (default ./OBS.json)")
+    ap.add_argument("--trace", default="OBS_TRACE.json",
+                    help="Chrome-trace output path "
+                         "(default ./OBS_TRACE.json)")
+    ap.add_argument("--compare", metavar="OLD",
+                    help="fail on regressions vs a baseline OBS.json")
+    ap.add_argument("--only", help="substring filter on engine names "
+                                   "(debug; compare gates still apply "
+                                   "to the traced subset)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single warm rep per engine (CI smoke; "
+                         "structural gates only in practice)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="warm calls per engine (default 3; smoke 1)")
+    args = ap.parse_args(argv)
+
+    old = None
+    if args.compare:
+        with open(args.compare) as fh:
+            old = json.load(fh)
+
+    reps = args.reps if args.reps is not None else (1 if args.smoke else 3)
+    report, trace = run_obs(only=args.only, reps=reps)
+    print(_summary(report))
+
+    with open(args.json, "w") as fh:
+        json.dump(report, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"[obs] wrote {args.json}")
+    with open(args.trace, "w") as fh:
+        json.dump(trace, fh)
+        fh.write("\n")
+    print(f"[obs] wrote {len(trace['traceEvents'])} spans to {args.trace}")
+
+    rc = 0
+    if old is not None:
+        regs = compare(report, old)
+        for r in regs:
+            print(f"[obs] REGRESSION: {r}")
+        if regs:
+            rc = 1
+        else:
+            print(f"[obs] compare vs {args.compare}: OK")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

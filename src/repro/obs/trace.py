@@ -1,0 +1,157 @@
+"""Host-side dispatch tracing over the analysis registry.
+
+Every engine the PR-5 auditor verifies is also *traceable*: the tracer
+builds the engine's tiny example, runs it with wall-clock spans around
+the cold (compile) and warm calls, brackets each call with the engine's
+jit-cache probe (so a recompile shows up as a counted event, not a
+mystery latency), sizes the argument/output pytrees, and counts
+host-transfer ops in the compiled HLO. Spans are emitted in Chrome
+trace-event format (load ``OBS_TRACE.json`` in ``chrome://tracing`` /
+Perfetto) and aggregated into the ``OBS.json`` report that
+``python -m repro.obs --compare`` gates regressions against.
+
+Scanner ships per-stage profiling as a first-class feature of its
+pipeline runtime; this is the equivalent for a stack whose "stages"
+are compiled programs — the unit of observation is the dispatch.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.analysis import registry
+from repro.analysis.hlo_audit import audit_hlo
+
+
+def traceable_engine_names() -> set:
+    """Engines the tracer covers: every registry entry with a jit-cache
+    probe (without one, recompiles inside a span are unobservable, so
+    the engine does not count as traced — the coverage lint in
+    ``repro.analysis`` flags it)."""
+    registry.import_engine_modules()
+    return {name for name, e in registry.engines().items()
+            if e.probe is not None}
+
+
+def _tree_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        size = getattr(leaf, "size", None)
+        dtype = getattr(leaf, "dtype", None)
+        if size is not None and dtype is not None:
+            total += int(size) * int(dtype.itemsize)
+    return total
+
+
+def _host_transfer_count(ex: registry.EngineExample) -> int:
+    """Host-transfer ops surviving in the compiled module (infeed /
+    outfeed / is_host_transfer sends / host callbacks) — counted via the
+    same detector the HLO audit uses."""
+    hlo = ex.fn.lower(*ex.args, **ex.kwargs).compile().as_text()
+    violations, _info = audit_hlo(hlo, {"no_host_transfers": True})
+    return sum(1 for v in violations if v["check"] == "host_transfer")
+
+
+class SpanRecorder:
+    """Collects Chrome trace events against one wall-clock origin."""
+
+    def __init__(self):
+        self.origin = time.perf_counter()
+        self.events: List[Dict] = []
+
+    def span(self, name: str, cat: str, t_start: float, t_end: float,
+             tid: int, args: Optional[Dict] = None) -> None:
+        self.events.append({
+            "name": name, "cat": cat, "ph": "X",
+            "ts": (t_start - self.origin) * 1e6,
+            "dur": max((t_end - t_start) * 1e6, 0.01),
+            "pid": 0, "tid": tid, "args": args or {}})
+
+    def chrome_trace(self) -> Dict:
+        return {"traceEvents": self.events, "displayTimeUnit": "ms"}
+
+
+def trace_engine(name: str, engine: registry.Engine, rec: SpanRecorder,
+                 tid: int, reps: int = 3, with_hlo: bool = True) -> Dict:
+    """Trace one engine: cold span (compile + first run), ``reps`` warm
+    spans, probe deltas, byte sizes, host-transfer count. Returns the
+    engine's OBS.json record."""
+    try:
+        ex = engine.build()
+    except registry.SkipEngine as e:
+        return {"skipped": str(e)}
+
+    probe = engine.probe or (lambda: 0)
+    p0 = probe()
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(ex.fn(*ex.args, **ex.kwargs))
+    t1 = time.perf_counter()
+    p1 = probe()
+    rec.span(f"{name}:cold", "compile+run", t0, t1, tid,
+             {"new_executables": p1 - p0})
+
+    spans_us = []
+    recompiles = 0
+    for i in range(max(reps, 1)):
+        q0 = probe()
+        s0 = time.perf_counter()
+        out = jax.block_until_ready(ex.fn(*ex.args, **ex.kwargs))
+        s1 = time.perf_counter()
+        q1 = probe()
+        recompiles += q1 - q0
+        spans_us.append((s1 - s0) * 1e6)
+        rec.span(name, "dispatch", s0, s1, tid,
+                 {"call": i, "recompiles": q1 - q0})
+
+    record = {
+        "cold_us": (t1 - t0) * 1e6,
+        "span_us": statistics.median(spans_us),
+        "span_min_us": min(spans_us),
+        "new_executables": int(p1 - p0),
+        "recompiles": int(recompiles),
+        "arg_bytes": _tree_bytes((ex.args, ex.kwargs)),
+        "out_bytes": _tree_bytes(out),
+    }
+    if with_hlo:
+        record["host_transfers"] = _host_transfer_count(ex)
+    return record
+
+
+def trace_all(only: Optional[str] = None, reps: int = 3,
+              with_hlo: bool = True) -> Tuple[Dict[str, Dict], Dict]:
+    """Trace every registered engine (optionally substring-filtered).
+    Returns ``(records, chrome_trace)``."""
+    registry.import_engine_modules()
+    engines = registry.engines()
+    if only:
+        engines = {k: v for k, v in engines.items() if only in k}
+    rec = SpanRecorder()
+    records: Dict[str, Dict] = {}
+    for tid, (name, engine) in enumerate(engines.items()):
+        records[name] = trace_engine(name, engine, rec, tid, reps=reps,
+                                     with_hlo=with_hlo)
+    return records, rec.chrome_trace()
+
+
+def validate_chrome_trace(trace: Dict) -> List[str]:
+    """Structural problems of a Chrome trace dict (empty list = valid:
+    serializable, required keys present, durations non-negative)."""
+    problems = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    for i, ev in enumerate(events):
+        for key in ("name", "ph", "ts", "pid", "tid"):
+            if key not in ev:
+                problems.append(f"event {i}: missing {key!r}")
+        if ev.get("ph") == "X" and ev.get("dur", 0) < 0:
+            problems.append(f"event {i}: negative dur")
+    try:
+        json.dumps(trace)
+    except (TypeError, ValueError) as e:
+        problems.append(f"not JSON-serializable: {e}")
+    return problems

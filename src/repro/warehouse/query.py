@@ -411,29 +411,36 @@ register_cache_probe("warehouse_query", lambda: _run_plan._cache_size())
 register_engine("warehouse_query_filter_groupby",
                 example_builder("query", "filter_groupby"),
                 probe=lambda: _run_plan._cache_size(),
-                covers=("repro.warehouse.query:_run_plan",))
+                covers=("repro.warehouse.query:_run_plan",),
+                probe_name="warehouse_query")
 register_engine("warehouse_query_window",
                 example_builder("query", "window_sum"),
-                probe=lambda: _run_plan._cache_size())
+                probe=lambda: _run_plan._cache_size(),
+                probe_name="warehouse_query")
 register_engine("warehouse_query_multi_topk",
                 example_builder("query", "multi_topk"),
-                probe=lambda: _run_plan._cache_size())
+                probe=lambda: _run_plan._cache_size(),
+                probe_name="warehouse_query")
 # the fused Pallas path (use_pallas=True) — the "_pallas" suffix keys
 # the per-engine scatter_ops.* ceilings AND the aggregated
 # scatter_ops.query_pallas=0 metric in benchmarks/run.py: the audit
 # fails the bench --compare if a scatter ever creeps back in
 register_engine("warehouse_query_pallas_groupby",
                 example_builder("query_pallas", "filter_groupby"),
-                probe=lambda: _run_plan._cache_size())
+                probe=lambda: _run_plan._cache_size(),
+                probe_name="warehouse_query")
 register_engine("warehouse_query_pallas_window",
                 example_builder("query_pallas", "window_sum"),
-                probe=lambda: _run_plan._cache_size())
+                probe=lambda: _run_plan._cache_size(),
+                probe_name="warehouse_query")
 register_engine("warehouse_query_pallas_groupmax",
                 example_builder("query_pallas", "group_max"),
-                probe=lambda: _run_plan._cache_size())
+                probe=lambda: _run_plan._cache_size(),
+                probe_name="warehouse_query")
 register_engine("warehouse_query_pallas_multi",
                 example_builder("query_pallas", "multi_topk"),
-                probe=lambda: _run_plan._cache_size())
+                probe=lambda: _run_plan._cache_size(),
+                probe_name="warehouse_query")
 
 
 def compile_cache_size() -> int:
@@ -638,13 +645,16 @@ def sharded_compile_cache_size() -> int:
 register_cache_probe("warehouse_query_sharded", sharded_compile_cache_size)
 register_engine("warehouse_query_sharded_groupby",
                 example_builder("query_sharded", "filter_groupby"),
-                probe=sharded_compile_cache_size)
+                probe=sharded_compile_cache_size,
+                probe_name="warehouse_query_sharded")
 register_engine("warehouse_query_sharded_topk",
                 example_builder("query_sharded", "topk"),
-                probe=sharded_compile_cache_size)
+                probe=sharded_compile_cache_size,
+                probe_name="warehouse_query_sharded")
 register_engine("warehouse_query_pallas_sharded",
                 example_builder("query_sharded", "filter_groupby", True),
-                probe=sharded_compile_cache_size)
+                probe=sharded_compile_cache_size,
+                probe_name="warehouse_query_sharded")
 
 
 def execute_sharded(store, plan, *, compressed: bool = False, key=None,

@@ -60,6 +60,8 @@ from repro.analysis.registry import example_builder, register_engine
 from repro.core.switcher import register_cache_probe
 from repro.distribution.sharding import put_row_sharded
 from repro.launch.mesh import make_shard_mesh
+from repro.obs.telemetry import (StoreTelemetry, store_obs_batch,
+                                 store_obs_init, store_obs_tick)
 
 SCALAR_COLUMNS = (
     ("stream_id", jnp.int32),
@@ -147,6 +149,10 @@ class SegmentStore:
         self.n_rows = 0
         self.t_max = -1
         self.columns = _empty_columns(0, out_dim)
+        # host-side observability counters (see ``telemetry()``) —
+        # deliberately NOT pytree aux: they vary per instance, and
+        # hashable aux must stay stable or every jit call recompiles
+        self.obs = store_obs_init()
 
     # -- capacity ------------------------------------------------------
     @property
@@ -188,6 +194,7 @@ class SegmentStore:
             T=T)
         self.n_rows += T
         self.t_max = max(self.t_max, t0 + T - 1)
+        store_obs_batch(self.obs, 1, T)
         return T
 
     def ingest_fused_multi(self, traces, out_vecs, *, stream_base: int = 0,
@@ -204,6 +211,7 @@ class SegmentStore:
             T=T)
         self.n_rows += V * T
         self.t_max = max(self.t_max, t0 + T - 1)
+        store_obs_batch(self.obs, V, T)
         return V * T
 
     def ingest_tick(self, traces, *, quality, out_vecs, t: int) -> int:
@@ -220,6 +228,7 @@ class SegmentStore:
             jnp.int32(self.n_rows))
         self.n_rows += V
         self.t_max = max(self.t_max, t)
+        store_obs_tick(self.obs, V)
         return V
 
     def append_rows(self, rows: Dict[str, jnp.ndarray]) -> int:
@@ -234,6 +243,7 @@ class SegmentStore:
         self.columns = _scatter(self.columns, upd, jnp.int32(self.n_rows))
         self.n_rows += n
         self.t_max = max(self.t_max, int(np.max(np.asarray(rows["t"]))))
+        store_obs_tick(self.obs, n)
         return n
 
     # -- reading -------------------------------------------------------
@@ -242,7 +252,16 @@ class SegmentStore:
         ``warehouse.query``; ``use_pallas=`` selects the aggregation
         kernel)."""
         from repro.warehouse import query as Q
+        self.obs["query_dispatches"] += 1
         return Q.execute(self, plan, **kw)
+
+    def telemetry(self) -> StoreTelemetry:
+        """Warehouse flight recorder: row counts, ingest/query dispatch
+        counts, and ingest-to-queryable lag — all from host metadata,
+        zero device reads. Counters are per live instance (a store
+        rebuilt through pytree unflatten starts fresh)."""
+        return StoreTelemetry(rows_by_shard=np.asarray([self.n_rows]),
+                              **self.obs)
 
     def host_rows(self) -> Dict[str, np.ndarray]:
         """All live rows as host numpy (an explicit full transfer — for
@@ -271,6 +290,9 @@ def _store_unflatten(aux, children) -> SegmentStore:
     s.out_dim, s.chunk_rows = out_dim, chunk_rows
     s.n_rows, s.t_max = n_rows, t_max
     s.columns = dict(zip(keys, children))
+    # fresh counters: mutable host state can't ride through aux (it
+    # must stay hashable and stable), so telemetry isn't checkpointed
+    s.obs = store_obs_init()
     return s
 
 
@@ -284,19 +306,23 @@ register_cache_probe(
              + _ingest_tick._cache_size()))
 register_engine("warehouse_scatter", example_builder("store_scatter"),
                 probe=lambda: _scatter._cache_size(),
-                covers=("repro.warehouse.store:_scatter",))
+                covers=("repro.warehouse.store:_scatter",),
+                probe_name="warehouse_append")
 register_engine("warehouse_ingest_fused",
                 example_builder("store_ingest_fused"),
                 probe=lambda: _ingest_fused._cache_size(),
-                covers=("repro.warehouse.store:_ingest_fused",))
+                covers=("repro.warehouse.store:_ingest_fused",),
+                probe_name="warehouse_append")
 register_engine("warehouse_ingest_fused_multi",
                 example_builder("store_ingest_fused_multi"),
                 probe=lambda: _ingest_fused_multi._cache_size(),
-                covers=("repro.warehouse.store:_ingest_fused_multi",))
+                covers=("repro.warehouse.store:_ingest_fused_multi",),
+                probe_name="warehouse_append")
 register_engine("warehouse_ingest_tick",
                 example_builder("store_ingest_tick"),
                 probe=lambda: _ingest_tick._cache_size(),
-                covers=("repro.warehouse.store:_ingest_tick",))
+                covers=("repro.warehouse.store:_ingest_tick",),
+                probe_name="warehouse_append")
 
 
 # ---------------------------------------------------------------------------
@@ -396,13 +422,16 @@ def _sharded_append_cache_size():
 register_cache_probe("warehouse_append_sharded", _sharded_append_cache_size)
 register_engine("warehouse_append_sharded",
                 example_builder("store_sharded", "append"),
-                probe=_sharded_append_cache_size)
+                probe=_sharded_append_cache_size,
+                probe_name="warehouse_append_sharded")
 register_engine("warehouse_ingest_sharded_fused",
                 example_builder("store_sharded", "fused_multi"),
-                probe=_sharded_append_cache_size)
+                probe=_sharded_append_cache_size,
+                probe_name="warehouse_append_sharded")
 register_engine("warehouse_ingest_sharded_tick",
                 example_builder("store_sharded", "tick"),
-                probe=_sharded_append_cache_size)
+                probe=_sharded_append_cache_size,
+                probe_name="warehouse_append_sharded")
 
 
 class ShardedStore:
@@ -435,6 +464,7 @@ class ShardedStore:
         self.n_rows_by_shard = np.zeros(self.n_shards, np.int64)
         self.columns = self._put(self._empty(0))
         self.n_rows_dev = self._put(jnp.zeros((self.n_shards,), jnp.int32))
+        self.obs = store_obs_init()
 
     def _put(self, tree):
         return put_row_sharded(tree, self.mesh) if self.mesh is not None \
@@ -508,6 +538,7 @@ class ShardedStore:
             jnp.int32(stream_base), jnp.int32(t0), T=T)
         self.n_rows_by_shard += counts
         self.t_max = max(self.t_max, t0 + T - 1)
+        store_obs_batch(self.obs, V, T)
         return V * T
 
     def ingest_tick(self, traces, *, quality, out_vecs, t: int) -> int:
@@ -525,6 +556,7 @@ class ShardedStore:
             jnp.asarray(out_vecs, jnp.float32), jnp.int32(t))
         self.n_rows_by_shard += counts
         self.t_max = max(self.t_max, t)
+        store_obs_tick(self.obs, V)
         return V
 
     def append_rows(self, rows: Dict[str, jnp.ndarray]) -> int:
@@ -542,6 +574,7 @@ class ShardedStore:
         if n:
             self.t_max = max(self.t_max,
                              int(np.max(np.asarray(rows["t"]))))
+        store_obs_tick(self.obs, n)
         return n
 
     # -- reading -------------------------------------------------------
@@ -554,7 +587,15 @@ class ShardedStore:
         """ONE shard_map dispatch: per-shard partial kernel + merge
         combiner (see ``warehouse.query.execute_sharded``)."""
         from repro.warehouse import query as Q
+        self.obs["query_dispatches"] += 1
         return Q.execute_sharded(self, plan, **kw)
+
+    def telemetry(self) -> StoreTelemetry:
+        """Warehouse flight recorder incl. per-shard balance: the
+        imbalance factor (max/mean shard rows) comes straight off the
+        ``n_rows_by_shard`` host metadata — zero device reads."""
+        return StoreTelemetry(
+            rows_by_shard=self.n_rows_by_shard.copy(), **self.obs)
 
     def host_rows(self) -> Dict[str, np.ndarray]:
         """All live rows as host numpy, shard-major (an explicit full

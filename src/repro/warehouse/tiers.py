@@ -30,7 +30,14 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.distribution.compression import dequantize, quantize_int8
+from repro.obs.telemetry import StoreTelemetry
 from repro.warehouse.store import SegmentStore, ShardedStore
+
+
+def _tier_obs_init():
+    """Host-side tier counters (see ``telemetry()``): chunk spills and
+    cold-tier dequantize (materialize cache-miss) events."""
+    return {"spill_events": 0, "spilled_rows": 0, "dequantize_events": 0}
 
 
 @functools.partial(jax.jit, static_argnames=("n", "chunk"))
@@ -94,6 +101,7 @@ class TieredStore:
         # memoized combined view; keyed on the hot columns object (every
         # append/spill replaces that dict) + the cold row count
         self._mat_cache = None
+        self.tier_obs = _tier_obs_init()
 
     @property
     def n_rows(self) -> int:
@@ -128,6 +136,8 @@ class TieredStore:
         self.n_cold += n_spill
         self.hot.columns = _compact(self.hot.columns, n_spill=n_spill)
         self.hot.n_rows -= n_spill
+        self.tier_obs["spill_events"] += 1
+        self.tier_obs["spilled_rows"] += n_spill
         return n_spill
 
     def materialize(self) -> Tuple[Dict[str, jnp.ndarray], int]:
@@ -145,11 +155,22 @@ class TieredStore:
         cols = _materialize(self.cold_q, self.cold_scales, self.cold_int,
                             self.hot.columns, chunk=self.hot.chunk_rows)
         self._mat_cache = (self.hot.columns, self.n_cold, cols)
+        self.tier_obs["dequantize_events"] += 1
         return cols, self.n_rows
 
     def query(self, plan, **kw):
         from repro.warehouse import query as Q
+        self.hot.obs["query_dispatches"] += 1
         return Q.execute(self, plan, **kw)
+
+    def telemetry(self) -> StoreTelemetry:
+        """Hot-tier flight recorder merged with the tier counters:
+        total rows span both tiers; spills/dequantizes count cold-tier
+        movement (a dequantize event = a materialize cache miss)."""
+        import dataclasses
+        return dataclasses.replace(
+            self.hot.telemetry(),
+            rows_by_shard=np.asarray([self.n_rows]), **self.tier_obs)
 
     def max_cold_scale(self) -> float:
         """Largest per-chunk quantization scale across the cold tier —
@@ -254,6 +275,7 @@ class ShardedTieredStore:
         self.cold_scales: Dict[str, jnp.ndarray] = {}
         self.cold_int: Dict[str, jnp.ndarray] = {}
         self._mat_cache = None
+        self.tier_obs = _tier_obs_init()
 
     @property
     def n_shards(self) -> int:
@@ -346,6 +368,8 @@ class ShardedTieredStore:
         self.hot.n_rows_by_shard = self.hot.n_rows_by_shard - d
         self.hot.n_rows_dev = self.hot.n_rows_dev - d_dev
         self.n_cold_by_shard += d
+        self.tier_obs["spill_events"] += 1
+        self.tier_obs["spilled_rows"] += int(d.sum())
         return int(d.sum())
 
     def shard_source(self):
@@ -365,11 +389,24 @@ class ShardedTieredStore:
                                     self.cold_int, self.hot.columns,
                                     off, chunk=self.hot.chunk_rows)
         self._mat_cache = (self.hot.columns, cold_key, cols)
+        self.tier_obs["dequantize_events"] += 1
         return cols, off + self.hot.n_rows_dev
 
     def query(self, plan, **kw):
         from repro.warehouse import query as Q
+        self.hot.obs["query_dispatches"] += 1
         return Q.execute_sharded(self, plan, **kw)
+
+    def telemetry(self) -> StoreTelemetry:
+        """Per-shard balance spans BOTH tiers (hot + that shard's cold
+        depth), so the imbalance factor reflects where rows actually
+        live, not just the hot residue after spills."""
+        import dataclasses
+        return dataclasses.replace(
+            self.hot.telemetry(),
+            rows_by_shard=(self.hot.n_rows_by_shard
+                           + self.n_cold_by_shard),
+            **self.tier_obs)
 
     def max_cold_scale(self) -> float:
         """Largest per-(shard, chunk) quantization scale across the cold
@@ -433,17 +470,21 @@ register_cache_probe(
 
 register_engine("tiers_quantize", example_builder("tiers_quantize"),
                 probe=lambda: _quantize_chunks._cache_size(),
-                covers=("repro.warehouse.tiers:_quantize_chunks",))
+                covers=("repro.warehouse.tiers:_quantize_chunks",),
+                probe_name="warehouse_tiers")
 register_engine("tiers_compact", example_builder("tiers_compact"),
                 probe=lambda: _compact._cache_size(),
-                covers=("repro.warehouse.tiers:_compact",))
+                covers=("repro.warehouse.tiers:_compact",),
+                probe_name="warehouse_tiers")
 register_engine("tiers_materialize", example_builder("tiers_materialize"),
                 probe=lambda: _materialize._cache_size(),
-                covers=("repro.warehouse.tiers:_materialize",))
+                covers=("repro.warehouse.tiers:_materialize",),
+                probe_name="warehouse_tiers")
 register_engine("tiers_quantize_sharded",
                 example_builder("tiers_quantize_sharded"),
                 probe=lambda: _quantize_chunks_sharded._cache_size(),
-                covers=("repro.warehouse.tiers:_quantize_chunks_sharded",))
+                covers=("repro.warehouse.tiers:_quantize_chunks_sharded",),
+                probe_name="warehouse_tiers_sharded")
 # the CLIP scatters in _cold_write / _materialize_sharded are vmapped
 # dynamic_update_slice — start-index clamping is that op's documented
 # semantics (offsets are cumulative cold depths, in range by
@@ -452,13 +493,16 @@ register_engine("tiers_quantize_sharded",
 register_engine("tiers_cold_write", example_builder("tiers_cold_write"),
                 invariants={"no_clip_scatter": False},
                 probe=lambda: _cold_write._cache_size(),
-                covers=("repro.warehouse.tiers:_cold_write",))
+                covers=("repro.warehouse.tiers:_cold_write",),
+                probe_name="warehouse_tiers_sharded")
 register_engine("tiers_compact_ragged",
                 example_builder("tiers_compact_ragged"),
                 probe=lambda: _compact_ragged._cache_size(),
-                covers=("repro.warehouse.tiers:_compact_ragged",))
+                covers=("repro.warehouse.tiers:_compact_ragged",),
+                probe_name="warehouse_tiers_sharded")
 register_engine("tiers_materialize_sharded",
                 example_builder("tiers_materialize_sharded"),
                 invariants={"no_clip_scatter": False},
                 probe=lambda: _materialize_sharded._cache_size(),
-                covers=("repro.warehouse.tiers:_materialize_sharded",))
+                covers=("repro.warehouse.tiers:_materialize_sharded",),
+                probe_name="warehouse_tiers_sharded")

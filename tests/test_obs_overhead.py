@@ -1,0 +1,76 @@
+"""The flight recorder's overhead contract: ``telemetry=True`` is ONE
+extra jit cache entry (still one dispatch, zero warm recompiles), and
+``telemetry=False`` lowers to the EXACT pre-telemetry program — pinned
+by jaxpr-census equality against the committed ``ANALYSIS.json``."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from repro.analysis import examples as EX
+from repro.analysis.jaxpr_lint import lint_jaxpr, trace_closed_jaxpr
+from repro.core.ingest import _fused_run, _fused_run_multi
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _warm(ex):
+    jax.block_until_ready(ex.fn(*ex.args, **ex.kwargs))
+
+
+@pytest.mark.parametrize("builder,builder_tel,fn", [
+    (EX.fused_single, EX.fused_single_telemetry, lambda: _fused_run),
+    (EX.fused_multi, EX.fused_multi_telemetry, lambda: _fused_run_multi),
+])
+def test_telemetry_flag_adds_at_most_one_executable(builder, builder_tel,
+                                                    fn):
+    """Warm no-telemetry engine; first telemetry call may compile ONE
+    new executable; every call after that adds zero."""
+    probe = fn()._cache_size
+    ex, ext = builder(), builder_tel()
+    _warm(ex)
+    _warm(ex)
+    p0 = probe()
+    _warm(ex)                       # warm baseline: no growth
+    assert probe() == p0
+    _warm(ext)                      # the one telemetry cache entry
+    p1 = probe()
+    assert p1 - p0 <= 1
+    _warm(ext)                      # telemetry path is warm too
+    _warm(ext)
+    assert probe() == p1
+    _warm(ex)                       # and the False path stayed warm
+    assert probe() == p1
+
+
+def test_no_telemetry_census_matches_committed_baseline():
+    """The telemetry=False jaxpr census equals the committed baseline's
+    (op-for-op): the flag's False branch reconstructs the pre-flag
+    program exactly, so runs that don't opt in pay literally nothing."""
+    path = os.path.join(_ROOT, "ANALYSIS.json")
+    with open(path) as fh:
+        base = json.load(fh)
+    if base["topology"]["n_devices"] != jax.device_count():
+        pytest.skip("census baseline was generated on another topology")
+    for name, builder in (("fused_single", EX.fused_single),
+                          ("fused_multi", EX.fused_multi)):
+        ex = builder()
+        closed = trace_closed_jaxpr(ex.fn, ex.args, ex.kwargs)
+        _, census = lint_jaxpr(closed, {})
+        assert census == base["engines"][name]["jaxpr_census"], name
+
+
+def test_telemetry_variant_is_single_dispatch():
+    """The telemetry=True program itself is one executable, zero warm
+    recompiles — the flight recorder can't fragment the fused run."""
+    for builder, fn in ((EX.fused_single_telemetry, _fused_run),
+                        (EX.fused_multi_telemetry, _fused_run_multi)):
+        ex = builder()
+        p0 = fn._cache_size()
+        _warm(ex)
+        p1 = fn._cache_size()
+        _warm(ex)
+        p2 = fn._cache_size()
+        assert p1 - p0 <= 1 and p2 == p1

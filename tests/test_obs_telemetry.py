@@ -1,0 +1,283 @@
+"""Flight-recorder telemetry: the on-device counters carried through
+the fused scans must match the sequential numpy float32 mirror
+(``repro.obs.telemetry_ref``) BIT-exactly, across forecast modes,
+ragged window tails, multi-stream batching, and both store flavors —
+plus the host-side pool and warehouse counters."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from benchmarks.fused_ingest_bench import _synthetic_fitted
+from repro.analysis import examples as EX
+from repro.configs.workloads import COVID
+from repro.core import ingest as IG
+from repro.core.forecaster import init_forecaster
+from repro.core.ingest import _fused_run, _fused_run_multi, _window_layout
+from repro.core.switcher import init_state, init_state_multi, stack_tables
+from repro.data.stream import generate
+from repro.obs import TEL_KEYS, Telemetry, telemetry_ref
+from repro.warehouse import SegmentStore, ShardedStore, TieredStore
+
+TRACE_KEYS = ("k", "dropped", "buffer_s", "on_s", "cl_s")
+N_SPLIT, INTERVAL = 2, 3
+
+
+def _k0(tables) -> int:
+    """Boot config of a switcher state: the most qualitative one."""
+    return int(np.argmin(np.asarray(tables.rank_pos)))
+
+
+def _run_single_tel(T, W, seed, mode):
+    """A toy single-stream fused run with telemetry; returns the
+    Telemetry plus the flattened per-segment traces."""
+    rng = np.random.default_rng(seed)
+    t = EX.demo_tables(seed=seed)
+    n_w, pad, wts, fracs = _window_layout(T, W)
+    K = t.cost.shape[0]
+    quals = jnp.asarray(rng.random((T, K)), jnp.float32)
+    quals_w = jnp.pad(quals, ((0, pad), (0, 0))).reshape(n_w, W, K)
+    arrs_w = jnp.ones((n_w, W), jnp.float32)
+    valid_w = (jnp.arange(n_w * W) < T).reshape(n_w, W)
+    params = init_forecaster(jax.random.PRNGKey(seed), N_SPLIT,
+                             t.centers.shape[0])
+    _, outs, _, _, tels = _fused_run(
+        init_state(t), jnp.zeros((N_SPLIT * INTERVAL,), jnp.int32),
+        quals_w, arrs_w, valid_w, jnp.asarray(wts), jnp.asarray(fracs),
+        t, t.centers, t.cost, params, jnp.float32(8.0),
+        jnp.float32(50.0), mode=mode, n_split=N_SPLIT,
+        interval=INTERVAL, telemetry=True)
+    traces = {k: np.asarray(outs[k]).reshape(-1)[:T] for k in TRACE_KEYS}
+    return Telemetry.from_device(tels), traces, _k0(t)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 8), st.integers(0, 10_000),
+       st.sampled_from(["oracle", "model", "uniform"]))
+def test_single_stream_counters_bit_exact(T, W, seed, mode):
+    """Property: device counters == sequential float32 replay of the
+    run's own traces, for any run length / window size (including the
+    ragged last window whose padding must be an exact no-op)."""
+    tel, traces, k0 = _run_single_tel(T, W, seed, mode)
+    ref = telemetry_ref(traces, k0)
+    for key in TEL_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(tel.counters[key]), ref[key], err_msg=key)
+    # window snapshots are cumulative: final row == counters
+    n_w = _window_layout(T, W)[0]
+    for key in TEL_KEYS:
+        assert tel.per_window[key].shape[0] == n_w
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 24), st.integers(2, 6), st.integers(1, 3),
+       st.integers(0, 10_000))
+def test_multi_stream_counters_bit_exact(T, W, V, seed):
+    """Property: per-stream (V,) counters of the batched engine match a
+    per-stream float32 replay (each stream boots on its own k0)."""
+    rng = np.random.default_rng(seed)
+    ts = [EX.demo_tables(seed=seed + s) for s in range(V)]
+    K = ts[0].cost.shape[0]
+    n_w, pad, wts, _ = _window_layout(T, W)
+    quals_w = jnp.asarray(rng.random((n_w, V, W, K)), jnp.float32)
+    arrs_w = jnp.ones((n_w, V, W), jnp.float32)
+    valid_w = jnp.broadcast_to(
+        (jnp.arange(n_w * W) < T).reshape(n_w, 1, W), (n_w, V, W))
+    _, (res, tels) = _fused_run_multi(
+        init_state_multi(ts), quals_w, arrs_w, valid_w,
+        jnp.asarray(wts), stack_tables(ts), ts[0].cost,
+        jnp.float32(16.0), jnp.float32(0.5),
+        with_traces=True, telemetry=True)
+    tel = Telemetry.from_device(tels)
+    traces = {k: np.asarray(res[k]).transpose(1, 0, 2).reshape(V, -1)[:, :T]
+              for k in TRACE_KEYS}
+    ref = telemetry_ref(traces, np.asarray([_k0(t) for t in ts]))
+    for key in TEL_KEYS:
+        assert np.asarray(tel.counters[key]).shape == (V,)
+        np.testing.assert_array_equal(
+            np.asarray(tel.counters[key]), ref[key], err_msg=key)
+
+
+def test_run_skyscraper_fused_telemetry_end_to_end():
+    """The public entry point: telemetry lands on the RunResult and
+    replays bit-exactly from the rows the warehouse sink captured."""
+    fitted = _synthetic_fitted()
+    stream = generate(COVID, days=0.01, seed=5)
+    T = stream.n_segments
+    tau = fitted.workload.segment_seconds
+    store = SegmentStore(out_dim=len(fitted.configs), chunk_rows=512)
+    res = IG.run_skyscraper_fused(
+        fitted, stream, n_cores=8, cloud_budget_core_s=5_000.0,
+        plan_days=64.5 * tau / 86400, forecast_mode="model",
+        sink=store, telemetry=True)
+    tel = res.telemetry
+    assert tel is not None and tel.segments == T
+    assert tel.buffer_hwm_s == float(np.max(res.buffer_trace))
+    # no drops in this generous-budget config -> the store rows carry
+    # every input needed for the full-fidelity replay
+    assert tel.dropped == 0.0
+    h = store.host_rows()
+    assert (h["t"] == np.arange(T)).all()
+    k0 = int(np.argmax(fitted.power))       # argmin(rank_pos)
+    ref = telemetry_ref(
+        {"k": h["k"], "dropped": np.zeros(T, np.float32),
+         "buffer_s": h["buffer_s"], "on_s": h["on_core_s"],
+         "cl_s": h["cloud_core_s"]}, k0)
+    for key in TEL_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(tel.counters[key]), ref[key], err_msg=key)
+    # telemetry=False keeps the field empty
+    res2 = IG.run_skyscraper_fused(
+        fitted, stream, n_cores=8, cloud_budget_core_s=5_000.0,
+        plan_days=64.5 * tau / 86400, forecast_mode="model")
+    assert res2.telemetry is None
+
+
+def test_run_skyscraper_multi_telemetry_with_sharded_sink():
+    """Multi-stream entry point: per-stream counters + sharded-store
+    ingest lag, with empty shards reporting a finite imbalance."""
+    fitteds = [_synthetic_fitted(seed=s) for s in range(2)]
+    streams = [generate(COVID, days=0.005, seed=s) for s in range(2)]
+    T = min(s.n_segments for s in streams)
+    tau = fitteds[0].workload.segment_seconds
+    store = ShardedStore(out_dim=len(fitteds[0].configs), n_shards=4,
+                         chunk_rows=256)
+    out = IG.run_skyscraper_multi(
+        fitteds, streams, n_cores_each=8, cloud_budget_core_s=900.0,
+        plan_days=64 * tau / 86400, sink=store, telemetry=True)
+    tel = out["telemetry"]
+    assert np.asarray(tel.counters["seg_total"]).shape == (2,)
+    assert tel.segments == 2 * T
+    stel = store.telemetry()
+    assert stel.n_rows == 2 * T
+    # streams 0,1 hash to shards 0,1 -> shards 2,3 stay empty
+    assert len(stel.rows_by_shard) == 4
+    assert (stel.rows_by_shard == 0).sum() == 2
+    assert stel.imbalance == 2.0
+    # fused batch: row t waited T-1-t ticks; mean (T-1)/2 over 2T rows
+    assert stel.ingest_dispatches == 1
+    assert stel.lag_max_ticks == T - 1
+    assert stel.lag_rows == 2 * T
+    assert stel.lag_sum_ticks == 2 * (T * (T - 1) // 2)
+    np.testing.assert_allclose(stel.lag_mean_ticks, (T - 1) / 2)
+
+
+def test_store_counters_tick_vs_batch_lag():
+    """append_rows is tick ingest (lag 0); ingest_fused is a batch
+    (lag 0..T-1); queries count; empty store is balanced by fiat."""
+    store = SegmentStore(out_dim=2, chunk_rows=64)
+    empty = store.telemetry()
+    assert empty.n_rows == 0 and empty.imbalance == 1.0
+    assert empty.lag_mean_ticks == 0.0
+    n = 50
+    rng = np.random.default_rng(0)
+    store.append_rows({
+        "stream_id": np.zeros(n, np.int32),
+        "t": np.arange(n, dtype=np.int32),
+        "category": np.zeros(n, np.int32),
+        "k": np.zeros(n, np.int32),
+        "quality": rng.random(n).astype(np.float32),
+        "on_core_s": rng.random(n).astype(np.float32),
+        "cloud_core_s": rng.random(n).astype(np.float32),
+        "buffer_s": rng.random(n).astype(np.float32),
+        "out": rng.random((n, 2)).astype(np.float32),
+    })
+    stel = store.telemetry()
+    assert stel.n_rows == n and stel.ingest_dispatches == 1
+    assert stel.lag_rows == n and stel.lag_sum_ticks == 0
+    assert stel.lag_max_ticks == 0 and stel.lag_mean_ticks == 0.0
+    from repro.warehouse import Filter
+    store.query((Filter("quality", "ge", 0.0),))
+    store.query((Filter("quality", "ge", 0.5),))
+    assert store.telemetry().query_dispatches == 2
+
+
+def test_tiered_store_spill_and_dequantize_counters():
+    """Tiering events: each spill and each cold-chunk materialization
+    (cache miss) is counted; cache hits are not."""
+    rng = np.random.default_rng(3)
+    n, chunk = 2048, 256
+    store = SegmentStore(out_dim=3, chunk_rows=chunk)
+    store.append_rows({
+        "stream_id": rng.integers(0, 4, n).astype(np.int32),
+        "t": np.arange(n, dtype=np.int32),
+        "category": rng.integers(0, 4, n).astype(np.int32),
+        "k": rng.integers(0, 3, n).astype(np.int32),
+        "quality": rng.random(n).astype(np.float32),
+        "on_core_s": rng.random(n).astype(np.float32),
+        "cloud_core_s": rng.random(n).astype(np.float32),
+        "buffer_s": rng.random(n).astype(np.float32),
+        "out": rng.random((n, 3)).astype(np.float32),
+    })
+    ts = TieredStore(store, seed=1)
+    spilled = ts.spill(keep_hot=n // 2)
+    stel = ts.telemetry()
+    assert stel.spill_events == 1 and stel.spilled_rows == spilled
+    assert stel.n_rows == n
+    assert stel.dequantize_events == 0
+    from repro.warehouse import GroupBy
+    plan = (GroupBy("category", "quality", agg="mean", num_groups=4),)
+    ts.query(plan)
+    d1 = ts.telemetry().dequantize_events
+    assert d1 >= 1
+    ts.query(plan)                      # cold tier unchanged: cache hit
+    assert ts.telemetry().dequantize_events == d1
+    assert ts.telemetry().query_dispatches >= 1
+
+
+def test_pool_host_telemetry_bit_exact_vs_sink_rows():
+    """The serving pool's host-side accumulator replays bit-exactly
+    from the per-tick rows its own sink captured, and counts ticks and
+    replans."""
+    from repro.core.api import Skyscraper, SkyscraperPool
+
+    sky = Skyscraper(segment_seconds=2.0, n_categories=3)
+    sky.set_resources(num_cores=4)
+    sky.register_knob("det", [1, 5, 10])
+    segs = list(np.linspace(0, 1, 40))
+
+    def proc(seg, kv):
+        return seg, float(np.clip(1 - seg * (1 - 1.0 / kv["det"]), 0, 1))
+
+    sky.fit(segs, proc, plan_segments=16)
+    V, n_ticks = 3, 16
+    store = SegmentStore(out_dim=len(sky.configs), chunk_rows=64)
+    pool = SkyscraperPool(sky, n_streams=V, sink=store, telemetry=True)
+    rng = np.random.default_rng(7)
+    for _ in range(n_ticks):
+        pool.process(list(rng.random(V)))
+    tel = pool.telemetry()
+    assert tel.extras["ticks"] == n_ticks
+    assert tel.extras["replans"] == 1.0          # tick 16 replanned
+    assert tel.segments == V * n_ticks
+    assert tel.dropped == 0.0
+    h = store.host_rows()
+    k0 = int(np.argmin(np.asarray(sky.tables.rank_pos)))
+    order = np.lexsort((h["t"], h["stream_id"]))
+    traces = {"k": h["k"][order].reshape(V, n_ticks),
+              "dropped": np.zeros((V, n_ticks), np.float32),
+              "buffer_s": h["buffer_s"][order].reshape(V, n_ticks),
+              "on_s": h["on_core_s"][order].reshape(V, n_ticks),
+              "cl_s": h["cloud_core_s"][order].reshape(V, n_ticks)}
+    ref = telemetry_ref(traces, k0)
+    for key in TEL_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(tel.counters[key]), ref[key], err_msg=key)
+    # without the flag the pool reports nothing (and pays nothing)
+    assert SkyscraperPool(sky, n_streams=V).telemetry() is None
+
+
+def test_window_deltas_sum_back_to_counters():
+    """Per-window deltas of the monotone counters telescope back to the
+    cumulative totals (the gauges stay cumulative)."""
+    tel, _, _ = _run_single_tel(T=23, W=5, seed=1, mode="uniform")
+    deltas = tel.window_deltas()
+    for key in TEL_KEYS:
+        if key == "buffer_hwm_s":
+            np.testing.assert_array_equal(deltas[key],
+                                          tel.per_window[key])
+        else:
+            np.testing.assert_allclose(
+                deltas[key].sum(axis=0), tel.counters[key],
+                rtol=1e-6, err_msg=key)

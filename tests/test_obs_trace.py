@@ -1,0 +1,173 @@
+"""The host-side dispatch tracer: span records + Chrome-trace output,
+the ``OBS.json`` regression gates (ceilings, host-class-gated span
+floors, topology skips, disappearing engines), and the three-way
+observability coverage lint."""
+
+import copy
+import json
+
+import numpy as np
+
+from repro.analysis.run import coverage_violations
+from repro.obs import validate_chrome_trace
+from repro.obs.run import SPAN_FLOOR_US, compare, main, run_obs
+from repro.obs.trace import SpanRecorder, trace_all
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_trace_subset_records_and_chrome_trace():
+    records, trace = trace_all(only="switch_step", reps=2)
+    assert records, "substring filter matched no engines"
+    for name, rec in records.items():
+        assert "skipped" not in rec, name
+        for key in ("cold_us", "span_us", "span_min_us",
+                    "new_executables", "recompiles", "arg_bytes",
+                    "out_bytes", "host_transfers"):
+            assert key in rec, f"{name} missing {key}"
+        assert rec["recompiles"] == 0
+        assert rec["host_transfers"] == 0
+        assert rec["span_us"] >= rec["span_min_us"] > 0
+        assert rec["arg_bytes"] > 0 and rec["out_bytes"] > 0
+    assert validate_chrome_trace(trace) == []
+    # cold + reps warm spans per engine
+    assert len(trace["traceEvents"]) == 3 * len(records)
+    json.dumps(trace)                       # round-trips
+
+
+def test_validate_chrome_trace_catches_malformed():
+    assert validate_chrome_trace({}) == ["traceEvents missing or not a list"]
+    bad = {"traceEvents": [{"ph": "X", "ts": 0.0, "pid": 0, "tid": 0,
+                            "dur": -1.0}]}
+    problems = validate_chrome_trace(bad)
+    assert any("missing 'name'" in p for p in problems)
+    assert any("negative dur" in p for p in problems)
+    unserializable = {"traceEvents": [
+        {"name": "x", "ph": "X", "ts": 0.0, "pid": 0, "tid": 0,
+         "args": {"a": np.float32(1.0)}}]}
+    assert any("serializable" in p
+               for p in validate_chrome_trace(unserializable))
+
+
+def test_span_recorder_clamps_duration():
+    rec = SpanRecorder()
+    t = rec.origin
+    rec.span("zero", "cat", t, t, tid=0)    # zero-length span
+    ev = rec.chrome_trace()["traceEvents"][0]
+    assert ev["dur"] > 0                    # clamped, still renders
+
+
+# ---------------------------------------------------------------------------
+# OBS.json compare gates (synthetic reports: each gate in isolation)
+# ---------------------------------------------------------------------------
+
+def _report(**eng):
+    rec = {"span_us": 6000.0, "cold_us": 1e5, "new_executables": 1,
+           "recompiles": 0, "host_transfers": 0}
+    rec.update(eng)
+    return {"schema": 1, "topology": {"n_devices": 1},
+            "host": {"host_cores": 4.0}, "engines": {"e": rec},
+            "n_engines": 1, "n_skipped": 0}
+
+
+def test_compare_clean_baseline_passes():
+    base = _report()
+    assert compare(copy.deepcopy(base), base) == []
+
+
+def test_compare_ceilings_zero_headroom():
+    base = _report()
+    for key in ("new_executables", "recompiles", "host_transfers"):
+        new = _report(**{key: base["engines"]["e"][key] + 1})
+        regs = compare(new, base)
+        assert len(regs) == 1 and key in regs[0] and "ceiling" in regs[0]
+
+
+def test_compare_span_floor_only_above_noise_floor():
+    base = _report()
+    assert compare(_report(span_us=7100.0), base) == []      # within 20%
+    regs = compare(_report(span_us=7300.0), base)            # >20%
+    assert len(regs) == 1 and "span_us" in regs[0]
+    # micro-span baselines never gate, however large the ratio
+    tiny = _report(span_us=SPAN_FLOOR_US / 10)
+    assert compare(_report(span_us=SPAN_FLOOR_US), tiny) == []
+
+
+def test_compare_host_class_change_makes_spans_advisory():
+    base = _report()
+    slow = _report(span_us=50_000.0)
+    slow["host"] = {"host_cores": 1.0}
+    assert compare(slow, base) == []
+    # ceilings still gate across host classes
+    slow["engines"]["e"]["recompiles"] = 2
+    assert len(compare(slow, base)) == 1
+
+
+def test_compare_topology_change_skips_engine_gates():
+    base = _report()
+    other = _report(recompiles=5, span_us=1e6)
+    other["topology"] = {"n_devices": 8}
+    assert compare(other, base) == []
+
+
+def test_compare_disappeared_or_skipped_engine_fails():
+    base = _report()
+    gone = copy.deepcopy(base)
+    gone["engines"] = {}
+    regs = compare(gone, base)
+    assert len(regs) == 1 and "disappeared" in regs[0]
+    skipped = copy.deepcopy(base)
+    skipped["engines"]["e"] = {"skipped": "no mesh"}
+    regs = compare(skipped, base)
+    assert len(regs) == 1 and "skipped" in regs[0]
+    # a baseline-side skip carries no numbers to gate against
+    base_skip = copy.deepcopy(base)
+    base_skip["engines"]["e"] = {"skipped": "no mesh"}
+    assert compare(copy.deepcopy(base_skip), base_skip) == []
+
+
+# ---------------------------------------------------------------------------
+# driver + coverage lint
+# ---------------------------------------------------------------------------
+
+def test_obs_main_writes_reports_and_self_compare_passes(tmp_path):
+    out = tmp_path / "OBS.json"
+    trace = tmp_path / "TRACE.json"
+    rc = main(["--only", "switch_step", "--smoke",
+               "--json", str(out), "--trace", str(trace)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["n_engines"] >= 1 and report["engines"]
+    assert validate_chrome_trace(json.loads(trace.read_text())) == []
+    # the report gates cleanly against itself
+    rc = main(["--only", "switch_step", "--smoke",
+               "--json", str(out), "--trace", str(trace),
+               "--compare", str(out)])
+    assert rc == 0
+
+
+def test_obs_run_marks_topology_and_host():
+    report, _ = run_obs(only="switch_step", reps=1, with_hlo=False)
+    assert report["topology"]["n_devices"] >= 1
+    assert report["host"]["host_cores"] >= 1.0
+
+
+def test_coverage_lint_clean_on_this_repo():
+    """Every cache probe is claimed by an engine, every probe_name
+    resolves, every engine is traceable — the three observability
+    registries agree."""
+    assert coverage_violations() == []
+
+
+def test_coverage_lint_flags_unclaimed_probe():
+    from repro.core.switcher import _CACHE_PROBES, register_cache_probe
+    register_cache_probe("obs_test_bogus_probe", lambda: 0)
+    try:
+        v = coverage_violations()
+        assert any(x["check"] == "probe_without_engine"
+                   and x["path"] == "obs_test_bogus_probe" for x in v)
+        assert all(x["path"] == "obs_test_bogus_probe" for x in v)
+    finally:
+        del _CACHE_PROBES["obs_test_bogus_probe"]
+    assert coverage_violations() == []
