@@ -98,6 +98,24 @@ def _compare(snap: dict, old_path: str) -> int:
         print(f"# host class changed ({old_cores:.0f} -> "
               f"{new_cores:.0f} cores): floor deltas advisory, "
               f"ceilings still gated")
+    # engines registered since the baseline legitimately grow the
+    # audit's dispatch_total; gate the total over the engines BOTH
+    # snapshots cover (every shared engine keeps its own per-engine
+    # ceiling either way, and new engines get one from the first
+    # committed snapshot that includes them)
+    new_sa, old_sa = snap.get("static_audit"), old.get("static_audit")
+    if isinstance(new_sa, dict) and isinstance(old_sa, dict) \
+            and isinstance(new_sa.get("dispatch_total"), (int, float)):
+        extra = sum(v for k, v in new_sa.items()
+                    if k.startswith("dispatch.") and k not in old_sa
+                    and isinstance(v, (int, float)))
+        if extra:
+            print(f"# static_audit.dispatch_total: {extra:.0f} "
+                  f"dispatches from engines new since the baseline "
+                  f"excluded from the ceiling")
+            new_sa = dict(new_sa)
+            new_sa["dispatch_total"] -= extra
+            snap = {**snap, "static_audit": new_sa}
     regressions = []
     for name in sorted(snap):
         if name not in old:
@@ -190,7 +208,8 @@ def main() -> None:
                             fused_ingest_bench, kernels_bench,
                             multi_stream_bench, offline_phase, overheads,
                             roofline, sharded_warehouse_bench,
-                            switcher_accuracy, warehouse_bench)
+                            standing_query_bench, switcher_accuracy,
+                            warehouse_bench)
     args = list(sys.argv[1:])
     json_out = compare_to = None
     for flag in ("--json", "--compare"):
@@ -220,6 +239,7 @@ def main() -> None:
         ("fused_ingest", fused_ingest_bench),
         ("warehouse(Load)", warehouse_bench),
         ("sharded_warehouse(Load)", sharded_warehouse_bench),
+        ("standing_queries(Load)", standing_query_bench),
         ("multi_stream(AppD)", multi_stream_bench),
         ("overheads(Fig13)", overheads),
         ("offline_phase(Table3)", offline_phase),

@@ -14,9 +14,9 @@
 #      plus the audit and obs smoke on that topology.
 #
 # --bench-smoke additionally runs the fused-ingest, warehouse, sharded-
-# warehouse, and multi-stream benchmarks in their --tiny configurations
-# after the tests, so none of the benchmark entry points can silently
-# rot.
+# warehouse, standing-query, and multi-stream benchmarks in their
+# --tiny configurations after the tests, so none of the benchmark entry
+# points can silently rot.
 #
 # Honors an existing XLA_FLAGS; otherwise forces a single host device so
 # smoke tests see a deterministic topology (the sharding tests fork their
@@ -63,6 +63,7 @@ echo "== sharded warehouse suite on 8 forced host devices =="
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   python -m pytest -x -q tests/test_sharded_warehouse.py \
     tests/test_sharded_properties.py tests/test_warehouse_agg_pallas.py \
+    tests/test_standing.py tests/test_standing_properties.py \
     tests/test_analysis.py
 
 echo "== static program audit on 8 forced host devices (violations only) =="
@@ -85,7 +86,7 @@ rm -f "$OBS_OUT" "$OBS_TRACE"
 
 if [[ "$BENCH_SMOKE" == "1" ]]; then
   for bench in fused_ingest_bench warehouse_bench sharded_warehouse_bench \
-               multi_stream_bench; do
+               standing_query_bench multi_stream_bench; do
     echo "== bench smoke: ${bench} --tiny =="
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
       python "benchmarks/${bench}.py" --tiny

@@ -378,6 +378,97 @@ def store_sharded(kind: str):
     raise ValueError(kind)
 
 
+# ---- warehouse: standing queries -------------------------------------------
+
+_Q_STAND = 2                     # stacked query slots in the examples
+
+
+def _standing_args(kind: str, q: int = _Q_STAND, sharded: bool = False):
+    """(spec, stacked (Q, F) threshold operands, init state) for a
+    standing-query group of ``q`` same-shape queries — the operand
+    layout ``StandingQueries`` threads through the ingest kernels."""
+    from repro.warehouse.query import normalize, split_plan
+    from repro.warehouse.standing import _num_groups
+    spec, fv = normalize(_plan(kind))
+    fvq = tuple(jnp.broadcast_to(a[None], (q,) + a.shape) for a in fv)
+    _pre, node, _post = split_plan(spec)
+    num = _num_groups(node)
+    lead = (N_SHARDS, q) if sharded else (q,)
+    fill = {"max": -jnp.inf, "min": jnp.inf}.get(node.agg, 0.0)
+    state = {"acc": jnp.full(lead + (num,), fill, jnp.float32),
+             "cnt": jnp.zeros(lead + (num,), jnp.float32)}
+    return spec, fvq, state
+
+
+def standing_backfill(kind: str, use_pallas: bool = False):
+    from repro.warehouse.standing import _backfill
+    spec, fvq, state = _standing_args(kind)
+    return EngineExample(_backfill,
+                         (_store_cols(), jnp.int32(50), fvq, state),
+                         {"sspec": (spec, bool(use_pallas))})
+
+
+def standing_fold_sharded():
+    from repro.launch.mesh import make_shard_mesh
+    from repro.warehouse.standing import _sharded_fold_kernel
+    spec, fvq, state = _standing_args("filter_groupby", sharded=True)
+    kern = _sharded_fold_kernel(make_shard_mesh(N_SHARDS), N_SHARDS)
+    return EngineExample(kern,
+                         (_store_cols(stacked=True),
+                          jnp.asarray([50, 40], jnp.int32), fvq, state),
+                         {"sspec": (spec, False)})
+
+
+def standing_answer(sharded: bool):
+    from repro.warehouse.standing import _answer_kernel
+    spec, fvq, state = _standing_args("filter_groupby",
+                                      sharded=bool(sharded))
+    return EngineExample(_answer_kernel, (state, fvq),
+                         {"spec": spec, "sharded": bool(sharded)})
+
+
+def store_scatter_standing():
+    """``append_rows`` with a registered standing query: the scatter
+    AND the incremental fold in the one jitted program."""
+    from repro.warehouse.store import (OUT_COLUMN, SCALAR_COLUMNS,
+                                      _scatter_fold)
+    n = 5
+    upd = {name: jnp.zeros((n,), dt) for name, dt in SCALAR_COLUMNS}
+    upd[OUT_COLUMN] = jnp.zeros((n, OUT_DIM), jnp.float32)
+    spec, fvq, state = _standing_args("filter_groupby")
+    return EngineExample(_scatter_fold,
+                         (_store_cols(), upd, jnp.int32(0), (state,),
+                          (fvq,)),
+                         {"sspecs": ((spec, False),)})
+
+
+def store_ingest_tick_standing():
+    from repro.warehouse.store import _ingest_tick
+    spec, fvq, state = _standing_args("filter_groupby")
+    return EngineExample(
+        _ingest_tick,
+        (_store_cols(), _traces(V), jnp.ones((V,), jnp.float32),
+         jnp.zeros((V, OUT_DIM), jnp.float32), jnp.int32(0),
+         jnp.int32(0), (state,), (fvq,)),
+        {"sspecs": ((spec, False),)})
+
+
+def store_sharded_standing():
+    """Sharded tick ingest with a standing fold: one ``shard_map``
+    dispatch writes the rows AND refreshes the per-shard partials."""
+    from repro.launch.mesh import make_shard_mesh
+    from repro.warehouse.store import _shard_kernel
+    kern = _shard_kernel("tick", make_shard_mesh(N_SHARDS), N_SHARDS)
+    cols, n_rows = _sharded_append_args()
+    spec, fvq, state = _standing_args("filter_groupby", sharded=True)
+    return EngineExample(
+        kern,
+        (cols, n_rows, _traces(V), jnp.ones((V,), jnp.float32),
+         jnp.zeros((V, OUT_DIM), jnp.float32), jnp.int32(0),
+         (state,), (fvq,)),
+        {"sspecs": ((spec, False),)})
+
+
 # ---- warehouse: tiers ------------------------------------------------------
 
 _CHUNK, _N_SPILL = 4, 8

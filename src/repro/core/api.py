@@ -226,7 +226,10 @@ class SkyscraperPool:
     stream in the warehouse: the batched switch decision straight off
     the device, plus the measured quality reported by the Transform. A
     ``warehouse.ShardedStore`` sink routes stream ``v``'s row to shard
-    ``v % n_shards`` inside the same tick dispatch.
+    ``v % n_shards`` inside the same tick dispatch. Standing queries
+    registered on the sink (``warehouse.standing``) refresh inside that
+    dispatch too, and each tick's fired alert subscriptions surface in
+    ``pool.alerts``.
 
     ``telemetry=True`` attaches the serving-loop flight recorder: a
     host-side sequential float32 accumulator (``repro.obs``'s
@@ -251,6 +254,8 @@ class SkyscraperPool:
         self._alpha = jnp.broadcast_to(
             sky.alpha, (n_streams,) + sky.alpha.shape)
         self._seen = 0
+        # last tick's fired standing-query alerts (see ``process``)
+        self.alerts = []
         self._tel = None
         if telemetry:
             from repro.obs.telemetry import HostTelemetry
@@ -311,6 +316,10 @@ class SkyscraperPool:
                        * q_dev[:, None])
             self.sink.ingest_tick(outs, quality=q_dev, out_vecs=out_vec,
                                   t=self._seen)
+            # the tick dispatch above already refreshed any registered
+            # standing queries; surface the fired alert masks per tick
+            from repro.core.ingest import _notify_standing
+            self.alerts = _notify_standing(self.sink)
         self._seen += 1
         if self._seen % self.sky._plan_every == 0:
             self._replan()

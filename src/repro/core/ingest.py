@@ -54,6 +54,10 @@ class RunResult:
     buffer_trace: np.ndarray = None
     plans: List = field(default_factory=list)
     telemetry: Optional[Telemetry] = None
+    # fired standing-query alerts from the sink's registry (one
+    # ``warehouse.standing.Alert`` per subscription), polled right
+    # after the run's rows landed — empty without a sink/registry
+    alerts: List = field(default_factory=list)
 
     @property
     def quality_pct(self) -> float:
@@ -279,6 +283,17 @@ def fused_cache_size() -> int:
     return _fused_run._cache_size()
 
 
+def _notify_standing(sink):
+    """Poll the sink's standing-query alert subscriptions right after a
+    run's rows landed (the ingest dispatch itself already refreshed the
+    registered partials — see ``warehouse.standing``); returns the
+    fired-alert list, [] when the sink has no registry/subscriptions."""
+    reg = getattr(sink, "standing", None)
+    if reg is None or not reg.has_subscriptions:
+        return []
+    return reg.poll()
+
+
 def _window_layout(T: int, W: int):
     """Split a T-segment run into ceil(T/W) fixed-length windows: padded
     reshape layout plus per-window real lengths and cloud rations."""
@@ -348,11 +363,13 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
     else:
         state, outs, rs, alphas = fused
         tel = None
+    alerts = []
     if sink is not None:
         # Load: the stacked (n_w, W) traces and the (T, K) quality
         # vectors never leave the device on their way into the store
         sink.ingest_fused(outs, quals, stream_id=sink_stream_id,
                           t0=sink_t0)
+        alerts = _notify_standing(sink)
     # un-window the traces: padding only ever sits at the very end, so
     # the flattened prefix [:T] is the run in time order
     cat = {k: np.asarray(v).reshape((n_w * W,) + v.shape[2:])[:T]
@@ -361,6 +378,7 @@ def run_skyscraper_fused(fitted: Fitted, stream: Stream, *, n_cores: int,
     res = _assemble_result(cat, _max_quality(stream, fitted.power), K,
                            [(rs[i], alphas[i]) for i in range(n_w)])
     res.telemetry = tel
+    res.alerts = alerts
     return res
 
 
@@ -505,9 +523,11 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
         tel = Telemetry.from_device(tels)
     else:
         res, tel = ys, None
+    alerts = []
     if sink is not None:
         sink.ingest_fused_multi(res, quals, stream_base=sink_stream_base,
                                 t0=sink_t0)
+        alerts = _notify_standing(sink)
         # padded segments are exact no-ops, so summing over (n_w, W) is
         # the per-stream quality total
         sums = np.asarray(res["qual"]).sum(axis=(0, 2))
@@ -516,6 +536,8 @@ def run_skyscraper_multi(fitteds, streams, *, n_cores_each: int,
     out = {"quality_pct": 100.0 * sums.sum() / max(qmax.sum(), 1e-9),
            "per_stream_pct": (100.0 * sums
                               / np.maximum(qmax, 1e-9)).tolist()}
+    if alerts:
+        out["alerts"] = alerts
     if telemetry:
         out["telemetry"] = tel
     return out

@@ -340,6 +340,13 @@ class StoreTelemetry:
     spill_events: int = 0
     spilled_rows: int = 0
     dequantize_events: int = 0
+    # standing-query registry (warehouse.standing): registered plans,
+    # how many ingest dispatches also refreshed them (lag-0 freshness —
+    # a refresh IS the ingest), and the alert subscriptions' activity
+    standing_queries: int = 0
+    standing_refreshes: int = 0
+    alerts_checked: int = 0
+    alerts_fired: int = 0
 
     @property
     def n_rows(self) -> int:
@@ -367,13 +374,18 @@ class StoreTelemetry:
                 f"ingests={self.ingest_dispatches} "
                 f"queries={self.query_dispatches} "
                 f"spills={self.spill_events} "
-                f"dequantizes={self.dequantize_events}")
+                f"dequantizes={self.dequantize_events} "
+                f"standing={self.standing_queries} "
+                f"refreshes={self.standing_refreshes} "
+                f"alerts={self.alerts_fired}/{self.alerts_checked}")
 
 
 def store_obs_init() -> Dict[str, int]:
     """Fresh host-side counter dict for a store instance."""
     return {"ingest_dispatches": 0, "query_dispatches": 0,
-            "lag_rows": 0, "lag_sum_ticks": 0, "lag_max_ticks": 0}
+            "lag_rows": 0, "lag_sum_ticks": 0, "lag_max_ticks": 0,
+            "standing_queries": 0, "standing_refreshes": 0,
+            "alerts_checked": 0, "alerts_fired": 0}
 
 
 def store_obs_batch(obs: Dict[str, int], n_streams: int, T: int) -> None:

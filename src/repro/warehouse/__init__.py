@@ -5,12 +5,14 @@ tiers.py)."""
 from repro.warehouse.query import (Filter, GroupBy, MultiGroupBy, Project,
                                    TopK, WindowAgg, execute, execute_ref,
                                    execute_sharded, to_host, windows_for)
+from repro.warehouse.standing import Alert, StandingQueries
 from repro.warehouse.store import SegmentStore, ShardedStore
 from repro.warehouse.tiers import (ShardedTieredStore, TieredStore,
                                    load_warehouse, save_warehouse)
 
 __all__ = [
     "SegmentStore", "ShardedStore", "TieredStore", "ShardedTieredStore",
+    "StandingQueries", "Alert",
     "Filter", "Project", "GroupBy", "WindowAgg", "MultiGroupBy", "TopK",
     "execute", "execute_sharded", "execute_ref", "to_host",
     "windows_for", "save_warehouse", "load_warehouse",

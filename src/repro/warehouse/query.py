@@ -252,6 +252,48 @@ def _seg_partial(table, mask, node):
     return {"acc": acc, "cnt": cnt}
 
 
+def _seg_fold(part, table, mask, node):
+    """Fold a batch of NEW rows into a stored partial IN PLACE of the
+    zero/∓inf seed: the scatter that ``_seg_partial`` runs over a zeroed
+    accumulator runs here over the STORED accumulator instead. For
+    sum/mean/count this continues each group's fp32 addition sequence
+    exactly where the stored partial left off (the same row-order
+    scatter-accumulation contract ``_seg_partial``'s ``segment_sum``
+    already relies on for single-shard bit-exactness), so a backfill
+    followed by any number of ingest-time folds produces the BIT-EXACT
+    accumulator one ``_seg_partial`` over the concatenated rows would —
+    the standing-query engine's exactness contract (see
+    ``warehouse.standing``). max/min/count folds are order-independent
+    and exact regardless."""
+    ids, num = _seg_ids(table, node)
+    v = table[node.value].astype(jnp.float32)
+    if node.agg in ("sum", "mean", "count"):
+        if v.ndim == 1:
+            # same stacked value+count single-scatter layout as
+            # _seg_partial, seeded with the stored accumulators
+            both = jnp.stack([part["acc"], part["cnt"]], axis=1)
+            upd = jnp.stack([jnp.where(mask, v, 0.0),
+                             mask.astype(jnp.float32)], axis=1)
+            both = both.at[ids].add(upd, mode="drop")
+            return {"acc": both[:, 0], "cnt": both[:, 1]}
+        acc = part["acc"].at[ids].add(jnp.where(mask[:, None], v, 0.0),
+                                      mode="drop")
+        cnt = part["cnt"].at[ids].add(mask.astype(jnp.float32),
+                                      mode="drop")
+        return {"acc": acc, "cnt": cnt}
+    assert v.ndim == 1, f"agg {node.agg!r} needs a scalar column"
+    cnt = part["cnt"].at[ids].add(mask.astype(jnp.float32), mode="drop")
+    if node.agg == "max":
+        acc = part["acc"].at[ids].max(jnp.where(mask, v, -jnp.inf),
+                                      mode="drop")
+    elif node.agg == "min":
+        acc = part["acc"].at[ids].min(jnp.where(mask, v, jnp.inf),
+                                      mode="drop")
+    else:
+        raise ValueError(f"unknown agg {node.agg!r}")
+    return {"acc": acc, "cnt": cnt}
+
+
 def _seg_finalize(acc, cnt, agg):
     """Merged accumulators -> the agg's answer (pure; shared verbatim
     by the 1-shard, sharded, and Pallas paths, so they cannot drift).

@@ -63,6 +63,17 @@ from repro.launch.mesh import make_shard_mesh
 from repro.obs.telemetry import (StoreTelemetry, store_obs_batch,
                                  store_obs_init, store_obs_tick)
 
+# repro.warehouse.standing's fold — imported lazily (inside the ingest
+# kernels, only on the sspecs != () trace path) because standing.py
+# imports query.py, which transitively imports this module: by the time
+# a StandingQueries registry can hand a store non-empty sspecs, the
+# standing module is fully initialized.
+
+
+def _fold_all(*args):
+    from repro.warehouse.standing import _fold_all as fold
+    return fold(*args)
+
 SCALAR_COLUMNS = (
     ("stream_id", jnp.int32),
     ("t", jnp.int32),
@@ -87,6 +98,30 @@ def _empty_columns(cap: int, out_dim: int) -> Dict[str, jnp.ndarray]:
     return cols
 
 
+def _bucket_cap(need: int, chunk: int) -> int:
+    """Smallest capacity from the fixed ladder ``{chunk * 2**j}`` that
+    fits ``need`` rows. Growing to ladder rungs (instead of the exact
+    chunk-aligned need) means EVERY store with the same chunk size
+    draws its capacities from one small global set, so the kernels
+    specialized on capacity (append / ingest / query) compile O(log
+    rows) times over a store's whole lifetime and a warm capacity is
+    never re-traced — the recompile-per-growth fix pinned by
+    tests/test_standing.py."""
+    units = max(1, -(-need // chunk))
+    return chunk * (1 << (units - 1).bit_length())
+
+
+def _standing_args(store):
+    """The attached ``StandingQueries`` registry's ingest operands
+    ``(sstates, sfvals, sspecs)`` — empty tuples (the kernels' no-op
+    defaults, tracing the exact pre-standing programs) when no registry
+    or no registered queries."""
+    reg = store.standing
+    if reg is None or not len(reg):
+        return (), (), ()
+    return reg.kernel_args()
+
+
 def _put_all(cols, upd, offset):
     """Write every column's update block at row ``offset`` (dynamic)."""
     def put(dst, src):
@@ -98,20 +133,48 @@ def _put_all(cols, upd, offset):
 _scatter = jax.jit(_put_all)
 
 
-@functools.partial(jax.jit, static_argnames=("T",))
-def _ingest_fused(cols, traces, out_vecs, stream_id, t0, offset, *, T):
+def _write_and_fold(cols, upd, offset, sstates, sfvals, sspecs):
+    """Scatter the update block AND fold it into the standing-query
+    accumulators — the shared tail of every single-store ingest kernel,
+    so registered answers refresh inside the SAME dispatch that lands
+    the rows (see ``warehouse.standing``). With no registered queries
+    (``sspecs=()``, the static default) this traces the exact
+    pre-standing program and keeps the old single-value return."""
+    new = _put_all(cols, upd, offset)
+    if not sspecs:
+        return new
+    # fold what a rescan would READ: the update block cast to the
+    # stored column dtypes (the standing exactness contract)
+    cast = {k: v.astype(cols[k].dtype) for k, v in upd.items()}
+    n = upd["t"].shape[0]
+    states = _fold_all(sstates, sfvals, cast, jnp.ones((n,), bool),
+                       jnp.int32(n), sspecs)
+    return new, states
+
+
+@functools.partial(jax.jit, static_argnames=("sspecs",))
+def _scatter_fold(cols, upd, offset, sstates, sfvals, *, sspecs):
+    """``append_rows`` + standing refresh in one dispatch (the plain
+    ``_scatter`` stays the no-registry fast path)."""
+    return _write_and_fold(cols, upd, offset, sstates, sfvals, sspecs)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "sspecs"))
+def _ingest_fused(cols, traces, out_vecs, stream_id, t0, offset,
+                  sstates=(), sfvals=(), *, T, sspecs=()):
     """One device op: flatten the fused engine's stacked (n_w, W) traces,
-    drop the tail padding, synthesize stream_id/t, scatter all columns."""
+    drop the tail padding, synthesize stream_id/t, scatter all columns
+    (folding standing-query partials in the same program)."""
     upd = {dst: traces[src].reshape(-1)[:T] for src, dst in _RUN_KEYS}
     upd["stream_id"] = jnp.full((T,), stream_id, jnp.int32)
     upd["t"] = t0 + jnp.arange(T, dtype=jnp.int32)
     upd[OUT_COLUMN] = out_vecs
-    return _put_all(cols, upd, offset)
+    return _write_and_fold(cols, upd, offset, sstates, sfvals, sspecs)
 
 
-@functools.partial(jax.jit, static_argnames=("T",))
-def _ingest_fused_multi(cols, traces, out_vecs, stream_base, t0, offset, *,
-                        T):
+@functools.partial(jax.jit, static_argnames=("T", "sspecs"))
+def _ingest_fused_multi(cols, traces, out_vecs, stream_base, t0, offset,
+                        sstates=(), sfvals=(), *, T, sspecs=()):
     """Multi-stream ingest: traces have (n_w, V, W) leaves; rows land
     stream-major ((stream 0 t=0..T-1), (stream 1 ...), ...)."""
     V = out_vecs.shape[0]
@@ -124,11 +187,12 @@ def _ingest_fused_multi(cols, traces, out_vecs, stream_base, t0, offset, *,
                         + jnp.repeat(jnp.arange(V, dtype=jnp.int32), T))
     upd["t"] = t0 + jnp.tile(jnp.arange(T, dtype=jnp.int32), V)
     upd[OUT_COLUMN] = out_vecs.reshape(V * T, -1)
-    return _put_all(cols, upd, offset)
+    return _write_and_fold(cols, upd, offset, sstates, sfvals, sspecs)
 
 
-@jax.jit
-def _ingest_tick(cols, traces, quality, out_vecs, t, offset):
+@functools.partial(jax.jit, static_argnames=("sspecs",))
+def _ingest_tick(cols, traces, quality, out_vecs, t, offset,
+                 sstates=(), sfvals=(), *, sspecs=()):
     """One serving-pool tick: V rows (one per live stream)."""
     V = quality.shape[0]
     upd = {dst: traces[src] for src, dst in _RUN_KEYS}
@@ -136,7 +200,7 @@ def _ingest_tick(cols, traces, quality, out_vecs, t, offset):
     upd["stream_id"] = jnp.arange(V, dtype=jnp.int32)
     upd["t"] = jnp.full((V,), t, jnp.int32)
     upd[OUT_COLUMN] = out_vecs
-    return _put_all(cols, upd, offset)
+    return _write_and_fold(cols, upd, offset, sstates, sfvals, sspecs)
 
 
 class SegmentStore:
@@ -153,6 +217,8 @@ class SegmentStore:
         # deliberately NOT pytree aux: they vary per instance, and
         # hashable aux must stay stable or every jit call recompiles
         self.obs = store_obs_init()
+        # StandingQueries registry (attached by its constructor)
+        self.standing = None
 
     # -- capacity ------------------------------------------------------
     @property
@@ -163,12 +229,7 @@ class SegmentStore:
         need = self.n_rows + n_new
         if need <= self.capacity:
             return
-        # geometric growth (chunk-aligned): amortized O(1) copies and
-        # O(log n) distinct capacities, so the executables specialized
-        # on capacity (append/query kernels) stay few for the store's
-        # whole lifetime
-        cap = -(-max(need, 2 * self.capacity)
-                // self.chunk_rows) * self.chunk_rows
+        cap = _bucket_cap(need, self.chunk_rows)
         grown = _empty_columns(cap, self.out_dim)
         if self.n_rows:
             grown = {k: jax.lax.dynamic_update_slice(
@@ -188,10 +249,16 @@ class SegmentStore:
             f"out_vecs must be (T, {self.out_dim})"
         self._reserve(T)
         sub = {src: traces[src] for src, _ in _RUN_KEYS}
-        self.columns = _ingest_fused(
+        sstates, sfvals, sspecs = _standing_args(self)
+        res = _ingest_fused(
             self.columns, sub, jnp.asarray(out_vecs, jnp.float32),
             jnp.int32(stream_id), jnp.int32(t0), jnp.int32(self.n_rows),
-            T=T)
+            sstates, sfvals, T=T, sspecs=sspecs)
+        if sspecs:
+            self.columns, states = res
+            self.standing.absorb(states)
+        else:
+            self.columns = res
         self.n_rows += T
         self.t_max = max(self.t_max, t0 + T - 1)
         store_obs_batch(self.obs, 1, T)
@@ -205,10 +272,16 @@ class SegmentStore:
         assert out_vecs.ndim == 3 and out_vecs.shape[2] == self.out_dim
         self._reserve(V * T)
         sub = {src: traces[src] for src, _ in _RUN_KEYS}
-        self.columns = _ingest_fused_multi(
+        sstates, sfvals, sspecs = _standing_args(self)
+        res = _ingest_fused_multi(
             self.columns, sub, jnp.asarray(out_vecs, jnp.float32),
             jnp.int32(stream_base), jnp.int32(t0), jnp.int32(self.n_rows),
-            T=T)
+            sstates, sfvals, T=T, sspecs=sspecs)
+        if sspecs:
+            self.columns, states = res
+            self.standing.absorb(states)
+        else:
+            self.columns = res
         self.n_rows += V * T
         self.t_max = max(self.t_max, t0 + T - 1)
         store_obs_batch(self.obs, V, T)
@@ -222,10 +295,16 @@ class SegmentStore:
         assert out_vecs.ndim == 2 and out_vecs.shape[1] == self.out_dim
         self._reserve(V)
         sub = {src: traces[src] for src, _ in _RUN_KEYS}
-        self.columns = _ingest_tick(
+        sstates, sfvals, sspecs = _standing_args(self)
+        res = _ingest_tick(
             self.columns, sub, jnp.asarray(quality, jnp.float32),
             jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
-            jnp.int32(self.n_rows))
+            jnp.int32(self.n_rows), sstates, sfvals, sspecs=sspecs)
+        if sspecs:
+            self.columns, states = res
+            self.standing.absorb(states)
+        else:
+            self.columns = res
         self.n_rows += V
         self.t_max = max(self.t_max, t)
         store_obs_tick(self.obs, V)
@@ -240,7 +319,15 @@ class SegmentStore:
             f"need exactly columns {sorted(self.columns)}"
         self._reserve(n)
         upd = {k: jnp.asarray(v) for k, v in rows.items()}
-        self.columns = _scatter(self.columns, upd, jnp.int32(self.n_rows))
+        sstates, sfvals, sspecs = _standing_args(self)
+        if sspecs:
+            self.columns, states = _scatter_fold(
+                self.columns, upd, jnp.int32(self.n_rows), sstates,
+                sfvals, sspecs=sspecs)
+            self.standing.absorb(states)
+        else:
+            self.columns = _scatter(self.columns, upd,
+                                    jnp.int32(self.n_rows))
         self.n_rows += n
         self.t_max = max(self.t_max, int(np.max(np.asarray(rows["t"]))))
         store_obs_tick(self.obs, n)
@@ -291,8 +378,10 @@ def _store_unflatten(aux, children) -> SegmentStore:
     s.n_rows, s.t_max = n_rows, t_max
     s.columns = dict(zip(keys, children))
     # fresh counters: mutable host state can't ride through aux (it
-    # must stay hashable and stable), so telemetry isn't checkpointed
+    # must stay hashable and stable), so telemetry isn't checkpointed;
+    # same for standing registries (re-register after a reload)
     s.obs = store_obs_init()
+    s.standing = None
     return s
 
 
@@ -301,12 +390,24 @@ jax.tree_util.register_pytree_node(SegmentStore, _store_flatten,
 
 register_cache_probe(
     "warehouse_append",
-    lambda: (_scatter._cache_size() + _ingest_fused._cache_size()
+    lambda: (_scatter._cache_size() + _scatter_fold._cache_size()
+             + _ingest_fused._cache_size()
              + _ingest_fused_multi._cache_size()
              + _ingest_tick._cache_size()))
 register_engine("warehouse_scatter", example_builder("store_scatter"),
                 probe=lambda: _scatter._cache_size(),
                 covers=("repro.warehouse.store:_scatter",),
+                probe_name="warehouse_append")
+# ingest + standing-query refresh fused into ONE executable: the same
+# append/tick kernels with the stacked standing state threaded through
+register_engine("warehouse_scatter_standing",
+                example_builder("store_scatter_standing"),
+                probe=lambda: _scatter_fold._cache_size(),
+                covers=("repro.warehouse.store:_scatter_fold",),
+                probe_name="warehouse_append")
+register_engine("warehouse_ingest_tick_standing",
+                example_builder("store_ingest_tick_standing"),
+                probe=lambda: _ingest_tick._cache_size(),
                 probe_name="warehouse_append")
 register_engine("warehouse_ingest_fused",
                 example_builder("store_ingest_fused"),
@@ -346,27 +447,56 @@ def _route_write(cols, n_rows, upd, owner, shard_id):
     return new, n_rows + own.sum(dtype=jnp.int32)
 
 
-def _append_traced(cols, n_rows, upd, mesh, n_shards):
+def _append_traced(cols, n_rows, upd, mesh, n_shards, sstates=(),
+                   sfvals=(), sspecs=()):
     """Routed append over all shards: shard_map on the mesh (one
     collective-free dispatch, each device writes its own block) or the
     vmapped stacked fallback. ``upd`` maps every column to an (n, ...)
-    replicated update block; ownership is ``stream_id % n_shards``."""
+    replicated update block; ownership is ``stream_id % n_shards``.
+
+    With standing queries registered (``sspecs`` non-empty) each shard
+    ALSO folds the rows it owns into its slice of the stacked standing
+    state — the ownership mask doubles as the fold mask, so a row's
+    contribution lands exactly once, on the shard that stores the row,
+    inside this same dispatch. The return grows a third element (the
+    folded state tuple); the empty-``sspecs`` trace is unchanged."""
     owner = upd["stream_id"].astype(jnp.int32) % n_shards
+    n = owner.shape[0]
     if mesh is None:
         sids = jnp.arange(n_shards, dtype=jnp.int32)
-        return jax.vmap(lambda c, nr, s: _route_write(c, nr, upd, owner,
-                                                      s))(cols, n_rows,
-                                                          sids)
+        if not sspecs:
+            return jax.vmap(lambda c, nr, s: _route_write(
+                c, nr, upd, owner, s))(cols, n_rows, sids)
 
-    def body(c, nr, u, ow):
-        new, n = _route_write({k: v[0] for k, v in c.items()}, nr[0], u,
-                              ow, jax.lax.axis_index("shard"))
-        return {k: v[None] for k, v in new.items()}, n[None]
+        def one(c, nr, s, sts):
+            new, nn = _route_write(c, nr, upd, owner, s)
+            cast = {k: upd[k].astype(c[k].dtype) for k in upd}
+            states = _fold_all(sts, sfvals, cast, owner == s,
+                               jnp.int32(n), sspecs)
+            return new, nn, states
 
+        return jax.vmap(one)(cols, n_rows, sids, sstates)
+
+    def body(c, nr, u, ow, sts, fvs):
+        c0 = {k: v[0] for k, v in c.items()}
+        sid = jax.lax.axis_index("shard")
+        new, n2 = _route_write(c0, nr[0], u, ow, sid)
+        stacked = {k: v[None] for k, v in new.items()}
+        if not sspecs:
+            return stacked, n2[None]
+        cast = {k: u[k].astype(c0[k].dtype) for k in u}
+        states = _fold_all(jax.tree.map(lambda x: x[0], sts), fvs,
+                           cast, ow == sid, jnp.int32(n), sspecs)
+        return stacked, n2[None], jax.tree.map(lambda x: x[None], states)
+
+    out_specs = (P("shard"), P("shard")) if not sspecs \
+        else (P("shard"), P("shard"), P("shard"))
     return shard_map(body, mesh=mesh,
-                     in_specs=(P("shard"), P("shard"), P(), P()),
-                     out_specs=(P("shard"), P("shard")),
-                     check_rep=False)(cols, n_rows, upd, owner)
+                     in_specs=(P("shard"), P("shard"), P(), P(),
+                               P("shard"), P()),
+                     out_specs=out_specs,
+                     check_rep=False)(cols, n_rows, upd, owner, sstates,
+                                      sfvals)
 
 
 # (kind, mesh, n_shards) -> jitted kernel; plain dict so the cache probe
@@ -380,12 +510,14 @@ def _shard_kernel(kind: str, mesh, n_shards: int):
     if kern is not None:
         return kern
     if kind == "append":
-        @jax.jit
-        def kern(cols, n_rows, upd):
-            return _append_traced(cols, n_rows, upd, mesh, n_shards)
+        @functools.partial(jax.jit, static_argnames=("sspecs",))
+        def kern(cols, n_rows, upd, sstates=(), sfvals=(), *, sspecs=()):
+            return _append_traced(cols, n_rows, upd, mesh, n_shards,
+                                  sstates, sfvals, sspecs)
     elif kind == "fused_multi":
-        @functools.partial(jax.jit, static_argnames=("T",))
-        def kern(cols, n_rows, traces, out_vecs, stream_base, t0, *, T):
+        @functools.partial(jax.jit, static_argnames=("T", "sspecs"))
+        def kern(cols, n_rows, traces, out_vecs, stream_base, t0,
+                 sstates=(), sfvals=(), *, T, sspecs=()):
             V = out_vecs.shape[0]
 
             def flat(x):                      # (n_w, V, W) -> (V*T,)
@@ -398,17 +530,20 @@ def _shard_kernel(kind: str, mesh, n_shards: int):
                                              T))
             upd["t"] = t0 + jnp.tile(jnp.arange(T, dtype=jnp.int32), V)
             upd[OUT_COLUMN] = out_vecs.reshape(V * T, -1)
-            return _append_traced(cols, n_rows, upd, mesh, n_shards)
+            return _append_traced(cols, n_rows, upd, mesh, n_shards,
+                                  sstates, sfvals, sspecs)
     elif kind == "tick":
-        @jax.jit
-        def kern(cols, n_rows, traces, quality, out_vecs, t):
+        @functools.partial(jax.jit, static_argnames=("sspecs",))
+        def kern(cols, n_rows, traces, quality, out_vecs, t,
+                 sstates=(), sfvals=(), *, sspecs=()):
             V = quality.shape[0]
             upd = {dst: traces[src] for src, dst in _RUN_KEYS}
             upd["quality"] = quality
             upd["stream_id"] = jnp.arange(V, dtype=jnp.int32)
             upd["t"] = jnp.full((V,), t, jnp.int32)
             upd[OUT_COLUMN] = out_vecs
-            return _append_traced(cols, n_rows, upd, mesh, n_shards)
+            return _append_traced(cols, n_rows, upd, mesh, n_shards,
+                                  sstates, sfvals, sspecs)
     else:
         raise ValueError(kind)
     _SHARD_KERNELS[key] = kern
@@ -430,6 +565,10 @@ register_engine("warehouse_ingest_sharded_fused",
                 probe_name="warehouse_append_sharded")
 register_engine("warehouse_ingest_sharded_tick",
                 example_builder("store_sharded", "tick"),
+                probe=_sharded_append_cache_size,
+                probe_name="warehouse_append_sharded")
+register_engine("warehouse_ingest_sharded_standing",
+                example_builder("store_sharded_standing"),
                 probe=_sharded_append_cache_size,
                 probe_name="warehouse_append_sharded")
 
@@ -465,6 +604,7 @@ class ShardedStore:
         self.columns = self._put(self._empty(0))
         self.n_rows_dev = self._put(jnp.zeros((self.n_shards,), jnp.int32))
         self.obs = store_obs_init()
+        self.standing = None
 
     def _put(self, tree):
         return put_row_sharded(tree, self.mesh) if self.mesh is not None \
@@ -493,8 +633,7 @@ class ShardedStore:
         need = int((self.n_rows_by_shard + incoming_by_shard).max())
         if need <= self.capacity:
             return
-        cap = -(-max(need, 2 * self.capacity)
-                // self.chunk_rows) * self.chunk_rows
+        cap = _bucket_cap(need, self.chunk_rows)
         pad = cap - self.capacity
         grown = {k: jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
                  for k, v in self.columns.items()}
@@ -533,9 +672,15 @@ class ShardedStore:
         counts = self._owner_counts(stream_base + np.arange(V)) * T
         self._reserve(counts)
         kern = _shard_kernel("fused_multi", self.mesh, self.n_shards)
-        self.columns, self.n_rows_dev = kern(
-            self.columns, self.n_rows_dev, sub, out_vecs,
-            jnp.int32(stream_base), jnp.int32(t0), T=T)
+        sstates, sfvals, sspecs = _standing_args(self)
+        res = kern(self.columns, self.n_rows_dev, sub, out_vecs,
+                   jnp.int32(stream_base), jnp.int32(t0), sstates,
+                   sfvals, T=T, sspecs=sspecs)
+        if sspecs:
+            self.columns, self.n_rows_dev, states = res
+            self.standing.absorb(states)
+        else:
+            self.columns, self.n_rows_dev = res
         self.n_rows_by_shard += counts
         self.t_max = max(self.t_max, t0 + T - 1)
         store_obs_batch(self.obs, V, T)
@@ -550,10 +695,16 @@ class ShardedStore:
         self._reserve(counts)
         sub = {src: traces[src] for src, _ in _RUN_KEYS}
         kern = _shard_kernel("tick", self.mesh, self.n_shards)
-        self.columns, self.n_rows_dev = kern(
-            self.columns, self.n_rows_dev, sub,
-            jnp.asarray(quality, jnp.float32),
-            jnp.asarray(out_vecs, jnp.float32), jnp.int32(t))
+        sstates, sfvals, sspecs = _standing_args(self)
+        res = kern(self.columns, self.n_rows_dev, sub,
+                   jnp.asarray(quality, jnp.float32),
+                   jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
+                   sstates, sfvals, sspecs=sspecs)
+        if sspecs:
+            self.columns, self.n_rows_dev, states = res
+            self.standing.absorb(states)
+        else:
+            self.columns, self.n_rows_dev = res
         self.n_rows_by_shard += counts
         self.t_max = max(self.t_max, t)
         store_obs_tick(self.obs, V)
@@ -568,8 +719,14 @@ class ShardedStore:
         self._reserve(counts)
         upd = {k: jnp.asarray(v) for k, v in rows.items()}
         kern = _shard_kernel("append", self.mesh, self.n_shards)
-        self.columns, self.n_rows_dev = kern(self.columns,
-                                             self.n_rows_dev, upd)
+        sstates, sfvals, sspecs = _standing_args(self)
+        res = kern(self.columns, self.n_rows_dev, upd, sstates, sfvals,
+                   sspecs=sspecs)
+        if sspecs:
+            self.columns, self.n_rows_dev, states = res
+            self.standing.absorb(states)
+        else:
+            self.columns, self.n_rows_dev = res
         self.n_rows_by_shard += counts
         if n:
             self.t_max = max(self.t_max,

@@ -31,7 +31,7 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.distribution.compression import dequantize, quantize_int8
 from repro.obs.telemetry import StoreTelemetry
-from repro.warehouse.store import SegmentStore, ShardedStore
+from repro.warehouse.store import SegmentStore, ShardedStore, _bucket_cap
 
 
 def _tier_obs_init():
@@ -114,7 +114,14 @@ class TieredStore:
     def spill(self, keep_hot: int) -> int:
         """Move the oldest whole chunks to the cold tier until at most
         ``keep_hot`` rows (rounded up to a chunk) stay hot. Returns the
-        number of rows spilled."""
+        number of rows spilled.
+
+        Standing queries (``warehouse.standing``) are spill-invariant:
+        every row's exact fp32 contribution folded into the stored
+        partials when the row was INGESTED, so demoting rows to int8
+        afterwards cannot touch a registered answer — only rescans (and
+        backfills of queries registered after the spill) see the
+        quantized values."""
         # keep_hot >= 0 keeps n_spill <= n_rows: capacity padding can
         # never enter the cold tier as phantom data
         assert keep_hot >= 0, keep_hot
@@ -157,6 +164,14 @@ class TieredStore:
         self._mat_cache = (self.hot.columns, self.n_cold, cols)
         self.tier_obs["dequantize_events"] += 1
         return cols, self.n_rows
+
+    @property
+    def standing(self):
+        """The hot store's ``StandingQueries`` registry (None until one
+        is attached — ``StandingQueries(tiered_store)`` attaches to the
+        hot tier, whose ingest kernels do the folding, while backfills
+        scan this wrapper's two-tier view)."""
+        return self.hot.standing
 
     def query(self, plan, **kw):
         from repro.warehouse import query as Q
@@ -298,13 +313,15 @@ class ShardedTieredStore:
         return self.cold_q["quality"].shape[1] if self.cold_q else 0
 
     def _cold_reserve(self, need: int) -> None:
-        """Grow the stacked cold arrays (chunk-aligned, geometric) to
-        fit the deepest shard's cold depth."""
+        """Grow the stacked cold arrays to fit the deepest shard's cold
+        depth — on the same bucketed capacity ladder as the stores
+        (``_bucket_cap``), so cold-tier growth never mints a new shape
+        for the spill/materialize kernels either."""
         cap = self.cold_capacity
         if need <= cap:
             return
         chunk = self.hot.chunk_rows
-        new_cap = -(-max(need, 2 * cap) // chunk) * chunk
+        new_cap = _bucket_cap(need, chunk)
 
         def grow(tree, cap_units, unit):
             pad = (new_cap // unit) - cap_units
@@ -333,7 +350,11 @@ class ShardedTieredStore:
         """Move each shard's oldest whole chunks to its cold tier until
         at most ``keep_hot`` rows (rounded up to a chunk) stay hot on
         that shard — depths are ragged across shards, so imbalanced or
-        empty shards never block the rest. Returns total rows spilled."""
+        empty shards never block the rest. Returns total rows spilled.
+
+        Spill-invariant for standing queries, exactly as on
+        ``TieredStore.spill``: contributions folded at ingest, so the
+        stored partials never see the quantization."""
         # keep_hot >= 0 keeps every depth <= that shard's live rows:
         # capacity padding can never enter the cold tier as phantom data
         assert keep_hot >= 0, keep_hot
@@ -391,6 +412,12 @@ class ShardedTieredStore:
         self._mat_cache = (self.hot.columns, cold_key, cols)
         self.tier_obs["dequantize_events"] += 1
         return cols, off + self.hot.n_rows_dev
+
+    @property
+    def standing(self):
+        """The hot store's ``StandingQueries`` registry (see
+        ``TieredStore.standing``)."""
+        return self.hot.standing
 
     def query(self, plan, **kw):
         from repro.warehouse import query as Q

@@ -410,13 +410,16 @@ def test_sharded_tier_shallow_spill_never_clamps_into_deep_shard():
         store.append_rows(rows)
         all_rows.append(rows)
 
-    add(6 * chunk, 0, 0, 41)            # shard 0 deep
-    add(100, 1, 6 * chunk, 42)
-    assert ts.spill(keep_hot=0) == 6 * chunk
-    add(6 * chunk, 0, 6 * chunk + 100, 43)   # shard 0 deeper: at capacity
-    assert ts.spill(keep_hot=0) == 6 * chunk
-    assert ts.n_cold_by_shard[0] == ts.cold_capacity == 12 * chunk
-    add(chunk, 1, 13 * chunk, 44)       # now ONLY shard 1 can spill
+    # 8-chunk spills land exactly ON the bucketed capacity ladder
+    # (chunk * 2^j), so the deep shard's cold tier sits EXACTLY at
+    # capacity — the tight layout this regression needs
+    add(8 * chunk, 0, 0, 41)            # shard 0 deep
+    add(100, 1, 8 * chunk, 42)
+    assert ts.spill(keep_hot=0) == 8 * chunk
+    add(8 * chunk, 0, 8 * chunk + 100, 43)   # shard 0 deeper: at capacity
+    assert ts.spill(keep_hot=0) == 8 * chunk
+    assert ts.n_cold_by_shard[0] == ts.cold_capacity == 16 * chunk
+    add(chunk, 1, 17 * chunk, 44)       # now ONLY shard 1 can spill
     assert ts.spill(keep_hot=0) == chunk
     assert ts.cold_capacity >= ts.n_cold_by_shard[0] + chunk
     # shard 0's cold rows survived: two-tier counts match the reference
