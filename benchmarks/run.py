@@ -20,7 +20,7 @@ whose key contains one of ``_FLOOR_KEYS`` — speedup factors and scan
 throughputs, the numbers the engine benches assert lower bounds on)
 regressed by more than 20%::
 
-    python benchmarks/run.py --json BENCH_NEW.json --compare BENCH_PR3.json
+    python benchmarks/run.py --json BENCH_NEW.json --compare BENCH_HEAD.json
 
 Floor metrics are ratios of two timings measured on the SAME host, so
 they only compare across snapshots from the same machine class: each
@@ -207,7 +207,7 @@ def main() -> None:
                             design_alternatives, forecaster_bench,
                             fused_ingest_bench, kernels_bench,
                             multi_stream_bench, offline_phase, overheads,
-                            roofline, sharded_warehouse_bench,
+                            pool_scale_bench, roofline, sharded_warehouse_bench,
                             standing_query_bench, switcher_accuracy,
                             warehouse_bench)
     args = list(sys.argv[1:])
@@ -241,6 +241,7 @@ def main() -> None:
         ("sharded_warehouse(Load)", sharded_warehouse_bench),
         ("standing_queries(Load)", standing_query_bench),
         ("multi_stream(AppD)", multi_stream_bench),
+        ("pool_scale", pool_scale_bench),
         ("overheads(Fig13)", overheads),
         ("offline_phase(Table3)", offline_phase),
         ("kernels", kernels_bench),

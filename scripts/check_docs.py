@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Doc-drift gate: every path and CLI flag the docs promise must exist.
+
+Scans ``README.md`` and ``docs/*.md`` and fails when:
+
+1. a referenced repo path (``src/...``, ``benchmarks/...``,
+   ``examples/...``, ``scripts/...``, ``tests/...``, ``docs/...``, or a
+   committed root file like ``ANALYSIS.json``) does not exist;
+2. a fenced ``bash`` command documents a ``--flag`` for a script or
+   ``python -m`` module whose source never mentions that flag
+   (e.g. the classic ``--compare SOME_OLD_BASELINE.json`` drift).
+
+Run from anywhere::
+
+    python scripts/check_docs.py [-q]
+
+Exit 0 = docs match the tree. Wired into ``scripts/tier1.sh`` and CI so
+interface renames fail before a reader trips over them.
+"""
+from __future__ import annotations
+
+import glob
+import itertools
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOC_FILES = ["README.md"] + sorted(glob.glob(os.path.join(ROOT, "docs",
+                                                          "*.md")))
+
+# path-like tokens rooted at a known top-level dir (brace groups expand)
+_PATH_RE = re.compile(
+    r"\b(?:src|docs|benchmarks|examples|scripts|tests)/"
+    r"[\w./{},-]*[\w}/]")
+# committed root-level artifacts; *_NEW/*_OLD/*_TRACE/PR-tagged names are
+# documented placeholders, not promises
+_ROOT_FILE_RE = re.compile(r"(?<![/\w])([A-Z][A-Z_0-9]*\.(?:md|json))\b")
+_PLACEHOLDER = re.compile(r"NEW|OLD|TRACE|OUT|PR\d")
+
+_FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
+_FLAG_RE = re.compile(r"(--[A-Za-z][\w-]*)")
+
+
+def _expand_braces(tok: str):
+    m = re.search(r"\{([^{}]*)\}", tok)
+    if not m:
+        return [tok]
+    out = []
+    for part in m.group(1).split(","):
+        out.extend(_expand_braces(tok[:m.start()] + part + tok[m.end():]))
+    return out
+
+
+def _iter_paths(text):
+    for m in _PATH_RE.finditer(text):
+        for tok in _expand_braces(m.group(0)):
+            yield tok.rstrip("/.")
+    for m in _ROOT_FILE_RE.finditer(text):
+        if not _PLACEHOLDER.search(m.group(1)):
+            yield m.group(1)
+
+
+def _module_sources(dotted: str):
+    """Source files implementing ``python -m <dotted>`` (package dir
+    py files, or the module file), [] if the module is missing."""
+    base = os.path.join(ROOT, "src", *dotted.split("."))
+    if os.path.isdir(base):
+        return glob.glob(os.path.join(base, "*.py"))
+    if os.path.isfile(base + ".py"):
+        return [base + ".py"]
+    return []
+
+
+def _script_sources(path: str):
+    full = os.path.join(ROOT, path)
+    return [full] if os.path.isfile(full) else []
+
+
+def _command_targets(line: str):
+    """(target name, source files) pairs for each runnable a command
+    line references — ``python -m mod``, ``python path.py``, ``*.sh``."""
+    toks = line.split()
+    for i, tok in enumerate(toks):
+        if tok == "-m" and i + 1 < len(toks) \
+                and toks[i + 1].startswith("repro"):
+            # only first-party modules; pytest etc. live off-tree
+            yield f"-m {toks[i + 1]}", _module_sources(toks[i + 1])
+        elif tok.endswith(".py") and "/" in tok:
+            yield tok, _script_sources(tok)
+        elif tok.endswith(".sh"):
+            yield tok, _script_sources(tok)
+
+
+def check(verbose: bool = True):
+    problems = []
+    for doc in DOC_FILES:
+        rel = os.path.relpath(doc, ROOT) if os.path.isabs(doc) else doc
+        text = open(os.path.join(ROOT, rel)).read()
+
+        here = os.path.dirname(os.path.join(ROOT, rel))
+        for path in sorted(set(_iter_paths(text))):
+            if not (os.path.exists(os.path.join(ROOT, path))
+                    or os.path.exists(os.path.join(here, path))):
+                problems.append(f"{rel}: missing path `{path}`")
+
+        for lang, body in _FENCE_RE.findall(text):
+            if lang not in ("bash", "sh", "shell", "console"):
+                continue
+            # join line continuations so flags stay with their command
+            body = body.replace("\\\n", " ")
+            for line in body.splitlines():
+                line = line.split("#", 1)[0]
+                targets = list(_command_targets(line))
+                if not targets:
+                    continue
+                flags = _FLAG_RE.findall(line)
+                srcs = list(itertools.chain.from_iterable(
+                    s for _, s in targets))
+                names = ", ".join(t for t, _ in targets)
+                missing_target = [t for t, s in targets if not s]
+                for t in missing_target:
+                    problems.append(f"{rel}: command references missing "
+                                    f"runnable `{t}`: {line.strip()}")
+                if not srcs:
+                    continue
+                blob = "".join(open(s).read() for s in srcs)
+                for flag in flags:
+                    if flag not in blob:
+                        problems.append(
+                            f"{rel}: flag `{flag}` not found in source "
+                            f"of {names}: {line.strip()}")
+    if problems:
+        for p in problems:
+            print(f"DOC DRIFT: {p}", file=sys.stderr)
+        return 1
+    if verbose:
+        n = len(DOC_FILES)
+        print(f"check_docs: {n} docs clean (paths + fenced command flags)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(verbose="-q" not in sys.argv[1:]))

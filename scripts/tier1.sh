@@ -4,6 +4,7 @@
 #   scripts/tier1.sh [--bench-smoke] [extra pytest args...]
 #
 # Legs:
+#   0. doc drift: scripts/check_docs.py (README + docs/ paths and flags);
 #   1. the full suite on the default (single-device) topology;
 #   2. static program audit + obs dispatch-trace smoke vs the committed
 #      ANALYSIS.json / OBS.json baselines;
@@ -39,6 +40,9 @@ done
 
 python -m pytest -x -q "${args[@]+"${args[@]}"}"
 
+echo "== doc drift check (README + docs/ vs the tree) =="
+python scripts/check_docs.py
+
 echo "== static program audit (jaxpr/HLO/source) vs ANALYSIS.json =="
 # every registered engine must audit clean, and no engine's dispatch
 # count may grow vs the committed baseline (generated at 1 device; the
@@ -64,7 +68,7 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   python -m pytest -x -q tests/test_sharded_warehouse.py \
     tests/test_sharded_properties.py tests/test_warehouse_agg_pallas.py \
     tests/test_standing.py tests/test_standing_properties.py \
-    tests/test_analysis.py
+    tests/test_analysis.py tests/test_pool_elastic.py
 
 echo "== static program audit on 8 forced host devices (violations only) =="
 # the shard_map engines compile with real collectives here; any
@@ -86,11 +90,13 @@ rm -f "$OBS_OUT" "$OBS_TRACE"
 
 if [[ "$BENCH_SMOKE" == "1" ]]; then
   for bench in fused_ingest_bench warehouse_bench sharded_warehouse_bench \
-               standing_query_bench multi_stream_bench; do
+               standing_query_bench multi_stream_bench pool_scale_bench; do
     echo "== bench smoke: ${bench} --tiny =="
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
       python "benchmarks/${bench}.py" --tiny
   done
   echo "== bench smoke: examples/vetl_observe.py (tiny traced run) =="
   python examples/vetl_observe.py
+  echo "== bench smoke: examples/vetl_pool_scale.py (elastic pool walkthrough) =="
+  python examples/vetl_pool_scale.py
 fi

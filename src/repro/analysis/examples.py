@@ -185,6 +185,52 @@ def pool_shift():
                          (bufs, jnp.ones((V,), jnp.int32)), {})
 
 
+def pool_replan_stacked():
+    from repro.core.api import _pool_replan_stacked
+    ex = pool_replan()
+    params, bufs, centers, cost, budget, use_model = ex.args
+    return EngineExample(
+        _pool_replan_stacked,
+        (params, bufs, centers, cost, budget, use_model,
+         jnp.ones((V,), bool), jnp.ones((V,), jnp.float32)),
+        dict(ex.kwargs))
+
+
+def pool_tick():
+    from repro.core.api import _pool_tick
+    from repro.core.switcher import init_state_multi, stack_tables
+    rng = np.random.default_rng(0)
+    ts = [demo_tables(seed=s) for s in range(V)]
+    alpha = jnp.stack([_alpha(rng) for _ in range(V)])
+    return EngineExample(
+        _pool_tick,
+        (init_state_multi(ts), jnp.ones((V,), jnp.float32),
+         jnp.ones((V,), bool), _quals(rng, V),
+         jnp.ones((V,), jnp.float32), jnp.ones((V,), bool),
+         jnp.ones((V,), jnp.float32), alpha, stack_tables(ts),
+         jnp.float32(np.inf), jnp.float32(np.inf)), {})
+
+
+def pool_admit():
+    from repro.core.api import _pool_admit
+    from repro.core.switcher import init_state_multi, stack_tables
+    rng = np.random.default_rng(0)
+    ts = [demo_tables(seed=s) for s in range(V)]
+    alpha = jnp.stack([_alpha(rng) for _ in range(V)])
+    bufs = jnp.zeros((V, N_SPLIT * INTERVAL), jnp.int32)
+    return EngineExample(
+        _pool_admit,
+        (stack_tables(ts), init_state_multi(ts), bufs, alpha,
+         jnp.zeros((V,), bool), jnp.zeros((V,), jnp.float32),
+         jnp.int32(0), jnp.float32(1.0), ts[0], _alpha(rng)), {})
+
+
+def pool_retire():
+    from repro.core.api import _pool_retire
+    return EngineExample(_pool_retire,
+                         (jnp.ones((V,), bool), jnp.int32(0)), {})
+
+
 # ---- forecaster / categories / planner -------------------------------------
 
 def adam_step():
@@ -349,6 +395,16 @@ def store_ingest_tick():
          jnp.int32(0)), {})
 
 
+def store_ingest_tick_masked():
+    from repro.warehouse.store import _ingest_tick_masked
+    return EngineExample(
+        _ingest_tick_masked,
+        (_store_cols(), _traces(V), jnp.ones((V,), jnp.float32),
+         jnp.zeros((V, OUT_DIM), jnp.float32), jnp.int32(0),
+         jnp.int32(0), jnp.arange(V, dtype=jnp.int32),
+         jnp.ones((V,), bool)), {})
+
+
 def _sharded_append_args():
     n_rows = jnp.zeros((N_SHARDS,), jnp.int32)
     return _store_cols(stacked=True), n_rows
@@ -375,7 +431,22 @@ def store_sharded(kind: str):
         return EngineExample(
             kern, (cols, n_rows, _traces(V), jnp.ones((V,), jnp.float32),
                    jnp.zeros((V, OUT_DIM), jnp.float32), jnp.int32(0)), {})
+    if kind == "tick_ids":
+        return EngineExample(
+            kern, (cols, n_rows, _traces(V), jnp.ones((V,), jnp.float32),
+                   jnp.zeros((V, OUT_DIM), jnp.float32), jnp.int32(0),
+                   jnp.arange(V, dtype=jnp.int32), jnp.ones((V,), bool)),
+            {})
     raise ValueError(kind)
+
+
+def store_rebalance():
+    from repro.launch.mesh import make_shard_mesh
+    from repro.runtime.elastic import _rebalance_kernel
+    mesh = make_shard_mesh(N_SHARDS)
+    kern = _rebalance_kernel(mesh, N_SHARDS, N_SHARDS)
+    cols, n_rows = _sharded_append_args()
+    return EngineExample(kern, (cols, n_rows), {"cap_new": CAP})
 
 
 # ---- warehouse: standing queries -------------------------------------------

@@ -157,5 +157,6 @@ def import_engine_modules() -> None:
                 "repro.core.api", "repro.core.forecaster",
                 "repro.core.categories", "repro.core.planner",
                 "repro.warehouse.query", "repro.warehouse.store",
-                "repro.warehouse.tiers", "repro.warehouse.standing"):
+                "repro.warehouse.tiers", "repro.warehouse.standing",
+                "repro.runtime.elastic"):
         importlib.import_module(mod)

@@ -42,6 +42,11 @@ from typing import Dict, List, Optional, Set, Tuple
 # modules whose jitted defs must be covered by the engine registry
 REGISTRY_SCOPED = ("repro/core", "repro/warehouse", "repro/distribution")
 
+# modules whose PUBLIC module-level functions and classes must carry
+# docstrings (the user-facing E/T/L surface + observability); the rule
+# rides in ANALYSIS.json, so coverage can only ratchet up
+DOCSTRING_SCOPED = ("repro.core.", "repro.warehouse.", "repro.obs.")
+
 _TRACING_CALLS = ("scan", "while_loop", "cond", "vmap", "shard_map",
                   "fori_loop", "switch", "checkpoint", "remat")
 
@@ -241,10 +246,34 @@ def _lint_jit_site(site: _JitSite, defs: Dict[str, ast.FunctionDef],
                 "path": f"{module}:{site.target}:{site.lineno}"})
 
 
+def _lint_docstrings(tree: ast.Module, module: str,
+                     violations: List[Dict]):
+    """Require a docstring on every PUBLIC module-level function and
+    class (name not ``_``-prefixed). Only runs for ``DOCSTRING_SCOPED``
+    modules — the documented contract surface of the repo."""
+    def violate(name, kind, lineno):
+        violations.append({
+            "pass": "source", "check": "missing_docstring",
+            "detail": f"public {kind} {name!r} has no docstring",
+            "path": f"{module}:{name}:{lineno}"})
+
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_") \
+                    and ast.get_docstring(node) is None:
+                violate(node.name, "function", node.lineno)
+        elif isinstance(node, ast.ClassDef):
+            if not node.name.startswith("_") \
+                    and ast.get_docstring(node) is None:
+                violate(node.name, "class", node.lineno)
+
+
 def lint_source(text: str, module: str) -> Tuple[List[Dict], Set[str]]:
     """Lint one module's source. Returns ``(violations, jit_defs)``
     where ``jit_defs`` is the set of ``module:name`` jit bindings found
-    (for the registry-coverage cross-reference)."""
+    (for the registry-coverage cross-reference). Modules under
+    ``DOCSTRING_SCOPED`` additionally get the public-docstring-coverage
+    rule."""
     violations: List[Dict] = []
     try:
         tree = ast.parse(text)
@@ -264,6 +293,9 @@ def lint_source(text: str, module: str) -> Tuple[List[Dict], Set[str]]:
                             violations)
     for s in sites:
         _lint_jit_site(s, defs, module, violations)
+    if module.startswith(DOCSTRING_SCOPED) \
+            or (module + ".").startswith(DOCSTRING_SCOPED):
+        _lint_docstrings(tree, module, violations)
     # only module-level bindings are registrable entry points; jit
     # factories that close over a mesh (query's `run`, store's `kern`)
     # are exercised through the engines that build them

@@ -15,6 +15,8 @@ import numpy as np
 
 
 def init_forecaster(key, n_split: int, n_categories: int) -> Dict:
+    """Init the tiny MLP (Sec. 4.2) that maps a day split's category
+    histogram to next-window category shares; returns the param tree."""
     k1, k2, k3 = jax.random.split(key, 3)
     d_in = n_split * n_categories
 

@@ -42,6 +42,9 @@ CLOUD_PREMIUM = 1.8      # App. L
 
 @dataclass
 class RunResult:
+    """Aggregate outcome of one simulated stream run: quality sums,
+    core-seconds by tier, buffer peak/overflow, and the config-choice
+    histogram/trace the ablation tables report."""
     quality_sum: float
     quality_max_sum: float
     onprem_core_s: float
@@ -107,6 +110,9 @@ def run_skyscraper(fitted: Fitted, stream: Stream, *, n_cores: int,
                    forecast_mode: str = "model",   # model | oracle | uniform
                    online_finetune: bool = False,  # App. E.2
                    seed: int = 0) -> RunResult:
+    """Reference (non-fused) online loop from the paper: plan per window
+    with the chosen forecast mode, then switch/process each segment;
+    returns the run's aggregate ``RunResult``."""
     w = fitted.workload
     tau = w.segment_seconds
     plan_days = plan_days or fitted.horizon_segments * tau / 86400
@@ -644,6 +650,7 @@ def _run_fixed_policy(fitted: Fitted, stream: Stream, pick_k, *,
 
 
 def run_static(fitted: Fitted, stream: Stream, k: int, **kw) -> RunResult:
+    """Ablation baseline: run the whole stream pinned to config ``k``."""
     return _run_fixed_policy(fitted, stream, lambda t, q: k, **kw)
 
 

@@ -17,6 +17,8 @@ SIZE_POW = {"small": 0.75, "medium": 0.9, "large": 1.0}
 
 
 def enumerate_configs(w: WorkloadCfg) -> List[Dict]:
+    """Cartesian product of the workload's knob values, one dict per
+    config (the K axis of every fitted table)."""
     names = list(w.knobs)
     out = []
     for vals in itertools.product(*(w.knobs[n] for n in names)):
@@ -25,6 +27,8 @@ def enumerate_configs(w: WorkloadCfg) -> List[Dict]:
 
 
 def task_multipliers(w: WorkloadCfg, kv: Dict) -> Dict[str, float]:
+    """Per-task compute multipliers a knob setting induces on the
+    workload's DAG (frame rate, tiling, detection interval, ...)."""
     m: Dict[str, float] = {}
     if w.name == "covid":
         fr = kv["frame_rate"] / 30.0
@@ -46,6 +50,8 @@ def task_multipliers(w: WorkloadCfg, kv: Dict) -> Dict[str, float]:
 
 
 def config_power(w: WorkloadCfg, kv: Dict) -> float:
+    """Scalar 'power' of a knob setting: the 1-D accuracy proxy the
+    quality model discounts by content difficulty (Eq. 5)."""
     if w.name == "covid":
         return ((kv["frame_rate"] / 30.0) ** 0.25
                 * (1.0 / kv["det_interval"]) ** 0.3
@@ -82,6 +88,7 @@ QUALITY_DISCOUNT = 0.85
 
 
 def quality(power, difficulty):
+    """Eq. 5 quality model: clip(1 - difficulty*(1 - 0.85*power), 0, 1)."""
     import numpy as np
     return np.clip(1.0 - difficulty * (1.0 - QUALITY_DISCOUNT * power),
                    0.0, 1.0)

@@ -32,6 +32,9 @@ RTT_S = 0.25
 
 @dataclass
 class Fitted:
+    """Everything the offline phase produces: per-config power/cost and
+    placement tables, the quality centers, forecaster params, and the
+    selected config subset — the immutable input to every engine."""
     workload: WorkloadCfg
     configs: List[Dict]
     power: np.ndarray
@@ -166,6 +169,9 @@ def fit(w: WorkloadCfg, *, n_cores: int, days_unlabeled: float = 14.0,
         n_categories: int = 4, seed: int = 0, sample_frac: float = 0.05,
         n_search: int = 5, plan_days: float = 2.0, input_days: float = 2.0,
         n_split: int = 8, max_k: int = 12) -> Fitted:
+    """Offline ETL fit (Sec. 4.1): profile configs on sampled segments,
+    solve placements, cluster content categories, train the forecaster,
+    and prune to ``max_k`` configs; returns the ``Fitted`` bundle."""
     t_all = {}
     rng = np.random.default_rng(seed)
     tau = w.segment_seconds

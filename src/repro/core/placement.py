@@ -20,6 +20,8 @@ import numpy as np
 
 @dataclass(frozen=True)
 class Task:
+    """One DAG node for placement: per-segment on-prem/cloud runtimes
+    and transfer sizes, with deps as indices into the task list."""
     name: str
     deps: Tuple[int, ...]
     onprem_ms: float
@@ -29,6 +31,8 @@ class Task:
 
 
 def tasks_from_dag(dag) -> List[Task]:
+    """Build ``Task`` records from the workload DAG tuples, resolving
+    dependency names to indices."""
     names = [t[0] for t in dag]
     out = []
     for name, deps, on_ms, cl_ms, mi, mo in dag:

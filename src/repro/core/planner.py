@@ -127,7 +127,7 @@ def solve_lp_rationed(qual, cost, r, *, core_s_per_segment, cloud_left,
     return solve_lp_lagrangian(qual, cost, r, budget / w_t)
 
 
-def solve_lp_stacked(qual, cost, r, budget):
+def solve_lp_stacked(qual, cost, r, budget, weights=None):
     """Batched multi-stream LP on STATIC shapes: qual (V, C_max, K)
     sentinel-padded category tables, r (V, C_max) forecasts with zero
     rate on padding rows, one shared ``budget``. The joint LP is the
@@ -136,8 +136,17 @@ def solve_lp_stacked(qual, cost, r, budget):
     solver once is exact; zero-rate rows contribute nothing to spend or
     value, so the padding cannot perturb the optimum. jit/scan-friendly
     device-side replacement for ``solve_multi_stream``'s host loop.
+
+    ``weights`` (V,), when given, scales each stream's quality term in
+    the joint objective: under a shared budget the Lagrangian tradeoff
+    ``w_v * qual - lambda * cost`` then buys quality for high-priority
+    streams first — the serving pool's priority-weighted admission
+    plan (scaling is a no-op for independent per-stream budgets, which
+    are scale-invariant; it only matters for this joint form).
     Returns alpha (V, C_max, K)."""
     V, C, K = qual.shape
+    if weights is not None:
+        qual = qual * jnp.asarray(weights, jnp.float32)[:, None, None]
     alpha = solve_lp_lagrangian(qual.reshape(V * C, K), cost,
                                 r.reshape(V * C), budget)
     return alpha.reshape(V, C, K)

@@ -38,6 +38,9 @@ BIG = jnp.int32(10 ** 6)
 
 @dataclass
 class SwitchTables:
+    """Device-resident lookup tables the online switcher steps against
+    (quality centers, cost/placement tables, rank order, thresholds) —
+    a pytree so multi-stream code can ``stack_tables`` a batch."""
     centers: jnp.ndarray      # (C, K) mean quality of config k on category c
     power: jnp.ndarray        # (K,)
     cost: jnp.ndarray         # (K,) all-on-prem core-s / segment
@@ -78,12 +81,19 @@ jax.tree_util.register_pytree_node(SwitchTables, _tables_flatten,
 
 
 def stack_tables(tables: List[SwitchTables]) -> SwitchTables:
-    """Stack V streams' tables leaf-wise onto a leading (V,) axis."""
-    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
-                        *tables)
+    """Stack V streams' tables leaf-wise onto a leading (V,) axis.
+    Python-float scalar fields (tau etc.) stack to STRONGLY-typed f32
+    leaves so carried table stacks round-trip through jitted admission
+    edits with stable avals (no weak->strong recompiles)."""
+    def stk(*xs):
+        out = jnp.stack([jnp.asarray(x) for x in xs])
+        return out.astype(out.dtype) if out.weak_type else out
+    return jax.tree.map(stk, *tables)
 
 
 def init_state(tables: SwitchTables) -> Dict:
+    """Fresh per-stream switcher state (usage stats, buffer, cloud
+    spend, current config = most qualitative)."""
     C, K = tables.centers.shape
     return {
         "used": jnp.zeros((C, K), jnp.float32),
@@ -299,6 +309,8 @@ _CACHE_PROBES = {
 
 
 def register_cache_probe(name: str, probe) -> None:
+    """Register a zero-arg callable reporting an engine's jit cache
+    entry count under ``name`` in ``compile_cache_sizes()``."""
     _CACHE_PROBES[name] = probe
 
 

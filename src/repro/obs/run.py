@@ -116,6 +116,9 @@ def _summary(report: Dict) -> str:
 
 
 def main(argv=None) -> int:
+    """CLI for the dispatch tracer (``python -m repro.obs``): runs every
+    registered engine under the tracer, writes OBS.json + a Chrome
+    trace, and regression-gates against ``--compare``."""
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs",
         description="dispatch tracer over every registered engine: "

@@ -292,25 +292,60 @@ class HostTelemetry:
 
     def __init__(self, n_streams: int, k0: int):
         self.V = int(n_streams)
+        self.k0 = int(k0)
         self.counters = {k: np.zeros((self.V,), np.float32)
                          for k in TEL_KEYS}
         self._k_prev = np.full((self.V,), int(k0), np.int64)
         self.ticks = 0
         self.replans = 0
 
-    def update(self, outs) -> None:
+    def update(self, outs, valid=None) -> None:
         """One pool tick: ``outs`` is the ``switch_step_multi`` outs
-        dict ((V,) leaves, device or host)."""
+        dict ((V,) leaves, device or host). ``valid`` (V,) bool masks
+        slots that took no step this tick (the elastic pool's
+        retired/empty slots) — their counters are untouched, matching
+        the fused engines' masked-step no-op contract."""
         self._k_prev = _accumulate(
             self.counters, self._k_prev, np.asarray(outs["k"]),
             np.asarray(outs["dropped"]), np.asarray(outs["buffer_s"]),
             np.asarray(outs["on_s"]), np.asarray(outs["cl_s"]),
-            np.ones((self.V,), bool))
+            np.ones((self.V,), bool) if valid is None
+            else np.asarray(valid, bool))
         self.ticks += 1
 
-    def snapshot(self) -> Telemetry:
+    def grow(self, n_streams: int) -> None:
+        """Widen the stream axis to ``n_streams`` slots (elastic-pool
+        bucket growth); existing counters are preserved, new slots
+        start zeroed with ``k_prev = k0``."""
+        n = int(n_streams)
+        if n <= self.V:
+            return
+        pad = n - self.V
+        self.counters = {k: np.concatenate(
+            [v, np.zeros((pad,), np.float32)])
+            for k, v in self.counters.items()}
+        self._k_prev = np.concatenate(
+            [self._k_prev, np.full((pad,), self.k0, np.int64)])
+        self.V = n
+
+    def reset_slot(self, v: int) -> None:
+        """Zero one slot's counters (a retired slot being re-admitted
+        for a different stream starts a fresh accumulation)."""
+        for arr in self.counters.values():
+            arr[v] = np.float32(0.0)
+        self._k_prev[v] = self.k0
+
+    def snapshot(self, select=None) -> Telemetry:
+        """Counter snapshot; ``select`` (slot indices) restricts the
+        stream axis (the elastic pool passes its active slots)."""
+        if select is None:
+            counters = {k: v.copy() for k, v in self.counters.items()}
+        else:
+            idx = np.asarray(select, np.int64)
+            counters = {k: v[idx].copy()
+                        for k, v in self.counters.items()}
         return Telemetry(
-            counters={k: v.copy() for k, v in self.counters.items()},
+            counters=counters,
             extras={"ticks": float(self.ticks),
                     "replans": float(self.replans)})
 

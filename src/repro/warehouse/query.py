@@ -79,6 +79,8 @@ from repro.kernels.warehouse_agg import (CMP as _CMP, FusedAggSpec,
 
 @dataclass(frozen=True)
 class Filter:
+    """Row predicate plan node: keep rows where ``column <op> value``
+    (also reused as the standing-alert predicate over answer tables)."""
     column: str
     op: str              # eq | ne | lt | le | gt | ge
     value: float         # dynamic operand: changing it never recompiles
@@ -86,11 +88,15 @@ class Filter:
 
 @dataclass(frozen=True)
 class Project:
+    """Column-selection plan node: restrict downstream nodes to
+    ``columns`` (trace-time slicing; no device work of its own)."""
     columns: Tuple[str, ...]
 
 
 @dataclass(frozen=True)
 class GroupBy:
+    """Grouped aggregation plan node: one ``segment_sum``-style pass
+    over an integer key column, fixed ``num_groups`` output shape."""
     key: str             # integer column holding the group id
     value: str           # column to aggregate
     agg: str = "sum"     # sum | mean | count | max | min
@@ -99,6 +105,8 @@ class GroupBy:
 
 @dataclass(frozen=True)
 class WindowAgg:
+    """Time-window aggregation plan node: group rows by
+    ``t // window`` into ``num_windows`` fixed slots."""
     window: int          # segments per time window (ids = t // window)
     value: str
     agg: str = "sum"
@@ -125,6 +133,8 @@ class MultiGroupBy:
 
 @dataclass(frozen=True)
 class TopK:
+    """Row-level top-k plan node: the ``k`` rows extremal in ``by``
+    (a post node — no fixed-size mergeable partial, so not standing)."""
     k: int
     by: str
     largest: bool = True

@@ -203,6 +203,35 @@ def _ingest_tick(cols, traces, quality, out_vecs, t, offset,
     return _write_and_fold(cols, upd, offset, sstates, sfvals, sspecs)
 
 
+@functools.partial(jax.jit, static_argnames=("sspecs",))
+def _ingest_tick_masked(cols, traces, quality, out_vecs, t, offset,
+                        stream_ids, valid, sstates=(), sfvals=(), *,
+                        sspecs=()):
+    """Elastic-pool tick: the slot axis carries REAL stream ids and an
+    ``active`` mask (retired/empty slots). Active rows compact to
+    consecutive positions at ``offset`` via the same masked-rank
+    scatter the sharded router uses (inactive rows index past the
+    capacity and drop), and only active rows fold into the standing
+    accumulators — all fixed-shape, one executable per capacity."""
+    V = quality.shape[0]
+    upd = {dst: traces[src] for src, dst in _RUN_KEYS}
+    upd["quality"] = quality
+    upd["stream_id"] = stream_ids.astype(jnp.int32)
+    upd["t"] = jnp.full((V,), t, jnp.int32)
+    upd[OUT_COLUMN] = out_vecs
+    keep = jnp.asarray(valid, bool)
+    cap = next(iter(cols.values())).shape[0]
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    idx = jnp.where(keep, offset + rank, cap)
+    new = {k: cols[k].at[idx].set(upd[k].astype(cols[k].dtype),
+                                  mode="drop") for k in cols}
+    if not sspecs:
+        return new
+    cast = {k: v.astype(cols[k].dtype) for k, v in upd.items()}
+    states = _fold_all(sstates, sfvals, cast, keep, jnp.int32(V), sspecs)
+    return new, states
+
+
 class SegmentStore:
     """Append-only columnar store for per-segment V-ETL results."""
 
@@ -287,28 +316,48 @@ class SegmentStore:
         store_obs_batch(self.obs, V, T)
         return V * T
 
-    def ingest_tick(self, traces, *, quality, out_vecs, t: int) -> int:
+    def ingest_tick(self, traces, *, quality, out_vecs, t: int,
+                    stream_ids=None, valid=None) -> int:
         """Land one serving-pool tick: traces have (V,) device leaves
         (a ``switch_step_multi`` outs dict); ``quality`` (V,) is the
-        measured quality reported by the user's Transform."""
+        measured quality reported by the user's Transform.
+
+        The elastic pool passes ``stream_ids`` (V,) — the REAL stream
+        id behind each slot — and ``valid`` (V,) host bool: inactive
+        slots land no row (the masked kernel compacts active rows to
+        consecutive positions). Defaults keep the fixed-pool contract:
+        slot v IS stream v, every slot lands."""
         V = int(out_vecs.shape[0])
         assert out_vecs.ndim == 2 and out_vecs.shape[1] == self.out_dim
-        self._reserve(V)
+        keep = None if valid is None else np.asarray(valid, bool)
+        n_new = V if keep is None else int(keep.sum())
+        self._reserve(n_new)
         sub = {src: traces[src] for src, _ in _RUN_KEYS}
         sstates, sfvals, sspecs = _standing_args(self)
-        res = _ingest_tick(
-            self.columns, sub, jnp.asarray(quality, jnp.float32),
-            jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
-            jnp.int32(self.n_rows), sstates, sfvals, sspecs=sspecs)
+        if stream_ids is None and keep is None:
+            res = _ingest_tick(
+                self.columns, sub, jnp.asarray(quality, jnp.float32),
+                jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
+                jnp.int32(self.n_rows), sstates, sfvals, sspecs=sspecs)
+        else:
+            ids = (np.arange(V) if stream_ids is None
+                   else np.asarray(stream_ids))
+            res = _ingest_tick_masked(
+                self.columns, sub, jnp.asarray(quality, jnp.float32),
+                jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
+                jnp.int32(self.n_rows), jnp.asarray(ids, jnp.int32),
+                jnp.asarray(np.ones(V, bool) if keep is None else keep),
+                sstates, sfvals, sspecs=sspecs)
         if sspecs:
             self.columns, states = res
             self.standing.absorb(states)
         else:
             self.columns = res
-        self.n_rows += V
-        self.t_max = max(self.t_max, t)
-        store_obs_tick(self.obs, V)
-        return V
+        self.n_rows += n_new
+        if n_new:
+            self.t_max = max(self.t_max, t)
+        store_obs_tick(self.obs, n_new)
+        return n_new
 
     def append_rows(self, rows: Dict[str, jnp.ndarray]) -> int:
         """Generic batched append: ``rows`` maps every column name to an
@@ -424,6 +473,13 @@ register_engine("warehouse_ingest_tick",
                 probe=lambda: _ingest_tick._cache_size(),
                 covers=("repro.warehouse.store:_ingest_tick",),
                 probe_name="warehouse_append")
+register_cache_probe("warehouse_tick_masked",
+                     lambda: _ingest_tick_masked._cache_size())
+register_engine("warehouse_ingest_tick_masked",
+                example_builder("store_ingest_tick_masked"),
+                probe=lambda: _ingest_tick_masked._cache_size(),
+                covers=("repro.warehouse.store:_ingest_tick_masked",),
+                probe_name="warehouse_tick_masked")
 
 
 # ---------------------------------------------------------------------------
@@ -448,7 +504,7 @@ def _route_write(cols, n_rows, upd, owner, shard_id):
 
 
 def _append_traced(cols, n_rows, upd, mesh, n_shards, sstates=(),
-                   sfvals=(), sspecs=()):
+                   sfvals=(), sspecs=(), valid=None):
     """Routed append over all shards: shard_map on the mesh (one
     collective-free dispatch, each device writes its own block) or the
     vmapped stacked fallback. ``upd`` maps every column to an (n, ...)
@@ -459,8 +515,17 @@ def _append_traced(cols, n_rows, upd, mesh, n_shards, sstates=(),
     state — the ownership mask doubles as the fold mask, so a row's
     contribution lands exactly once, on the shard that stores the row,
     inside this same dispatch. The return grows a third element (the
-    folded state tuple); the empty-``sspecs`` trace is unchanged."""
+    folded state tuple); the empty-``sspecs`` trace is unchanged.
+
+    ``valid`` (n,) bool, when given, marks rows that must NOT land
+    anywhere (the elastic pool's retired/empty slots): their owner is
+    forced past the last shard id, so the routed scatter drops them and
+    the standing folds never see them — the default ``None`` traces the
+    exact pre-elastic program."""
     owner = upd["stream_id"].astype(jnp.int32) % n_shards
+    if valid is not None:
+        owner = jnp.where(jnp.asarray(valid, bool), owner,
+                          jnp.int32(n_shards))
     n = owner.shape[0]
     if mesh is None:
         sids = jnp.arange(n_shards, dtype=jnp.int32)
@@ -544,6 +609,18 @@ def _shard_kernel(kind: str, mesh, n_shards: int):
             upd[OUT_COLUMN] = out_vecs
             return _append_traced(cols, n_rows, upd, mesh, n_shards,
                                   sstates, sfvals, sspecs)
+    elif kind == "tick_ids":
+        @functools.partial(jax.jit, static_argnames=("sspecs",))
+        def kern(cols, n_rows, traces, quality, out_vecs, t, stream_ids,
+                 valid, sstates=(), sfvals=(), *, sspecs=()):
+            V = quality.shape[0]
+            upd = {dst: traces[src] for src, dst in _RUN_KEYS}
+            upd["quality"] = quality
+            upd["stream_id"] = stream_ids.astype(jnp.int32)
+            upd["t"] = jnp.full((V,), t, jnp.int32)
+            upd[OUT_COLUMN] = out_vecs
+            return _append_traced(cols, n_rows, upd, mesh, n_shards,
+                                  sstates, sfvals, sspecs, valid=valid)
     else:
         raise ValueError(kind)
     _SHARD_KERNELS[key] = kern
@@ -569,6 +646,10 @@ register_engine("warehouse_ingest_sharded_tick",
                 probe_name="warehouse_append_sharded")
 register_engine("warehouse_ingest_sharded_standing",
                 example_builder("store_sharded_standing"),
+                probe=_sharded_append_cache_size,
+                probe_name="warehouse_append_sharded")
+register_engine("warehouse_ingest_sharded_tick_ids",
+                example_builder("store_sharded", "tick_ids"),
                 probe=_sharded_append_cache_size,
                 probe_name="warehouse_append_sharded")
 
@@ -609,6 +690,28 @@ class ShardedStore:
     def _put(self, tree):
         return put_row_sharded(tree, self.mesh) if self.mesh is not None \
             else tree
+
+    @classmethod
+    def _from_parts(cls, *, out_dim, n_shards, chunk_rows, mesh, columns,
+                    n_rows_dev, n_rows_by_shard, t_max):
+        """Adopt already-partitioned device columns without an ingest
+        pass — the constructor ``runtime.elastic.rebalance`` uses to
+        wrap its one-dispatch repartition output. Host bookkeeping
+        (per-shard counts) comes from the caller; obs counters and the
+        standing registry start fresh (rebalance re-registers)."""
+        self = cls.__new__(cls)
+        self.out_dim = int(out_dim)
+        self.n_shards = int(n_shards)
+        self.chunk_rows = int(chunk_rows)
+        self.mesh = mesh
+        self.t_max = int(t_max)
+        self.n_rows_by_shard = np.asarray(n_rows_by_shard,
+                                          np.int64).copy()
+        self.columns = columns
+        self.n_rows_dev = n_rows_dev
+        self.obs = store_obs_init()
+        self.standing = None
+        return self
 
     def _empty(self, cap: int) -> Dict[str, jnp.ndarray]:
         cols = {n: jnp.zeros((self.n_shards, cap), dt)
@@ -686,29 +789,51 @@ class ShardedStore:
         store_obs_batch(self.obs, V, T)
         return V * T
 
-    def ingest_tick(self, traces, *, quality, out_vecs, t: int) -> int:
+    def ingest_tick(self, traces, *, quality, out_vecs, t: int,
+                    stream_ids=None, valid=None) -> int:
         """Land one serving-pool tick (V rows, stream v -> shard
-        ``v % n_shards``)."""
+        ``v % n_shards``). ``stream_ids`` / ``valid`` route the elastic
+        pool's slot axis: each active slot's row goes to the shard
+        owning its REAL stream id, inactive slots land nothing — same
+        single routed dispatch (see ``SegmentStore.ingest_tick``)."""
         V = int(out_vecs.shape[0])
         assert out_vecs.ndim == 2 and out_vecs.shape[1] == self.out_dim
-        counts = self._owner_counts(np.arange(V))
-        self._reserve(counts)
         sub = {src: traces[src] for src, _ in _RUN_KEYS}
-        kern = _shard_kernel("tick", self.mesh, self.n_shards)
         sstates, sfvals, sspecs = _standing_args(self)
-        res = kern(self.columns, self.n_rows_dev, sub,
-                   jnp.asarray(quality, jnp.float32),
-                   jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
-                   sstates, sfvals, sspecs=sspecs)
+        if stream_ids is None and valid is None:
+            counts = self._owner_counts(np.arange(V))
+            self._reserve(counts)
+            kern = _shard_kernel("tick", self.mesh, self.n_shards)
+            res = kern(self.columns, self.n_rows_dev, sub,
+                       jnp.asarray(quality, jnp.float32),
+                       jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
+                       sstates, sfvals, sspecs=sspecs)
+        else:
+            ids = (np.arange(V) if stream_ids is None
+                   else np.asarray(stream_ids))
+            keep = (np.ones(V, bool) if valid is None
+                    else np.asarray(valid, bool))
+            counts = np.bincount(ids[keep].astype(np.int64)
+                                 % self.n_shards,
+                                 minlength=self.n_shards)
+            self._reserve(counts)
+            kern = _shard_kernel("tick_ids", self.mesh, self.n_shards)
+            res = kern(self.columns, self.n_rows_dev, sub,
+                       jnp.asarray(quality, jnp.float32),
+                       jnp.asarray(out_vecs, jnp.float32), jnp.int32(t),
+                       jnp.asarray(ids, jnp.int32), jnp.asarray(keep),
+                       sstates, sfvals, sspecs=sspecs)
         if sspecs:
             self.columns, self.n_rows_dev, states = res
             self.standing.absorb(states)
         else:
             self.columns, self.n_rows_dev = res
         self.n_rows_by_shard += counts
-        self.t_max = max(self.t_max, t)
-        store_obs_tick(self.obs, V)
-        return V
+        n_new = int(counts.sum())
+        if n_new:
+            self.t_max = max(self.t_max, t)
+        store_obs_tick(self.obs, n_new)
+        return n_new
 
     def append_rows(self, rows: Dict[str, jnp.ndarray]) -> int:
         """Generic batched append, routed by the rows' own stream ids."""

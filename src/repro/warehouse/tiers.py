@@ -466,6 +466,9 @@ def save_warehouse(path: str, ts: TieredStore) -> str:
 
 
 def load_warehouse(path: str) -> TieredStore:
+    """Restore a ``save_warehouse`` checkpoint into a fresh hot
+    ``SegmentStore`` wrapped in a ``TieredStore`` (cold tier re-attached
+    from the saved metadata)."""
     tree, meta = ckpt.restore(path, return_meta=True)
     assert meta is not None, f"{path} is not a warehouse checkpoint"
     hot = SegmentStore(meta["out_dim"], chunk_rows=meta["chunk_rows"])

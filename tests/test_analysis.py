@@ -194,6 +194,25 @@ def test_static_name_missing_flagged():
         "def f(x):\n    return x\n")
 
 
+def test_missing_docstring_flagged_in_scoped_modules():
+    src = ("def public(x):\n    return x\n"
+           "class Thing:\n    pass\n"
+           "def _private(x):\n    return x\n")
+    v, _ = lint_source(src, "repro.core.fake")
+    flagged = [x["path"] for x in v if x["check"] == "missing_docstring"]
+    assert flagged == ["repro.core.fake:public:1", "repro.core.fake:Thing:3"]
+    # unscoped modules don't get the rule
+    v2, _ = lint_source(src, "repro.runtime.fake")
+    assert [x for x in v2 if x["check"] == "missing_docstring"] == []
+
+
+def test_docstring_present_clean():
+    src = ('def public(x):\n    """Doc."""\n    return x\n'
+           'class Thing:\n    """Doc."""\n')
+    v, _ = lint_source(src, "repro.warehouse.fake")
+    assert [x for x in v if x["check"] == "missing_docstring"] == []
+
+
 def test_jit_defs_module_level_only():
     _, defs = lint_source(
         "import jax\n"
